@@ -1,0 +1,72 @@
+"""Beyond-paper ablation: error feedback (Stich et al., cited by the paper
+for HFL gradients) transplanted to split-learning cut activations.
+
+Open question the paper leaves implicit: does EF, the standard fix for
+biased gradient compression, transfer to activation compression? Finding
+(reported either way): activations are per-sample signals, so classic EF is
+ill-posed; per-class residual memory is the closest analogue and we measure
+its effect against plain Topk and RandTopk at high compression.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import EPOCHS, dataset, spec
+from repro.core.error_feedback import ef_topk_forward
+from repro.optim import adamw_init, adamw_update
+from repro.split import tabular
+from repro.split.tabular import SplitSpec, bottom_fn, top_fn, train
+
+
+def train_ef(sp: SplitSpec, ds, *, epochs, seed=0):
+    key = jax.random.key(seed)
+    bottom, top = tabular.init_parties(key, sp)
+    opt_b, opt_t = adamw_init(bottom), adamw_init(top)
+    err0 = jnp.zeros((sp.n_classes, sp.cut_dim))
+
+    @jax.jit
+    def step(bottom, top, opt_b, opt_t, err, x, y):
+        o_b, vjp_bottom = jax.vjp(lambda bp: bottom_fn(bp, x), bottom)
+        view, mask, new_err = ef_topk_forward(o_b, err, y, sp.k,
+                                              sp.n_classes)
+        view = jax.lax.stop_gradient(view)
+        (loss, _), vjp_top = jax.vjp(lambda tp, o: top_fn(tp, o, y), top,
+                                     view)
+        dtp, dview = vjp_top((jnp.ones(()),
+                              jnp.zeros((x.shape[0], sp.n_classes))))
+        (dbp,) = vjp_bottom(dview * mask.astype(dview.dtype))
+        bottom, opt_b, _ = adamw_update(bottom, dbp, opt_b, lr=sp.lr,
+                                        grad_clip=0.0)
+        top, opt_t, _ = adamw_update(top, dtp, opt_t, lr=sp.lr,
+                                     grad_clip=0.0)
+        return bottom, top, opt_b, opt_t, new_err, loss
+
+    rng = np.random.RandomState(seed)
+    err = err0
+    for _ in range(epochs):
+        for xb, yb in ds.batches(128, rng=rng):
+            bottom, top, opt_b, opt_t, err, loss = step(
+                bottom, top, opt_b, opt_t, err, jnp.asarray(xb),
+                jnp.asarray(yb))
+    return tabular.evaluate(bottom, top, sp, jnp.asarray(ds.x_test),
+                            jnp.asarray(ds.y_test))
+
+
+def main(emit=print):
+    ds = dataset()
+    sp = spec("topk", k=3)
+    acc_topk = train(sp, ds, epochs=EPOCHS, seed=0)["test_acc"]
+    acc_rand = train(spec("randtopk", k=3, alpha=0.1), ds,
+                     epochs=EPOCHS, seed=0)["test_acc"]
+    acc_ef = train_ef(sp, ds, epochs=EPOCHS, seed=0)
+    emit(f"ef,topk,{acc_topk:.4f}")
+    emit(f"ef,randtopk,{acc_rand:.4f}")
+    emit(f"ef,topk+class_error_feedback,{acc_ef:.4f}")
+    # informational: does EF close any of the randtopk-topk gap?
+    emit(f"ef_info,ef_minus_topk,{acc_ef - acc_topk:+.4f}")
+    emit(f"ef_info,randtopk_minus_ef,{acc_rand - acc_ef:+.4f}")
+    return {"topk": acc_topk, "randtopk": acc_rand, "ef": acc_ef}
+
+
+if __name__ == "__main__":
+    main()

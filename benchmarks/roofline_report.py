@@ -1,0 +1,32 @@
+"""Roofline summary from the checked-in dry-run JSONs (does not recompile;
+run `python -m repro.launch.dryrun --all --json dryrun_singlepod.json` to
+regenerate the inputs)."""
+import json
+import os
+
+
+def main(emit=print):
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "dryrun_singlepod.json")
+    if not os.path.exists(path):
+        emit("roofline_report,skipped,no dryrun_singlepod.json")
+        return None
+    data = json.load(open(path))
+    rows = data["rows"]
+    emit(f"roofline_report,rows,{len(rows)}")
+    emit(f"roofline_report,failures,{len(data['failures'])}")
+    by_bneck = {}
+    for r in rows:
+        by_bneck.setdefault(r["bottleneck"], []).append(r)
+    for b, rs in sorted(by_bneck.items()):
+        emit(f"roofline_report,bottleneck_{b},{len(rs)}")
+    worst = max(rows, key=lambda r: (max(r["t_compute_s"], r["t_memory_s"],
+                                         r["t_collective_s"])
+                                     / max(r["t_compute_s"], 1e-9)))
+    emit(f"roofline_report,worst_fraction,{worst['arch']}x{worst['shape']}")
+    emit(f"roofline_check,all_combinations_lower,{len(data['failures']) == 0}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

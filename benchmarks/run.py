@@ -1,0 +1,68 @@
+"""Benchmark driver — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all paper benches
+    PYTHONPATH=src python -m benchmarks.run --fast     # reduced epochs
+    REPRO_BENCH_EPOCHS=40 ... python -m benchmarks.run # deeper runs
+
+Emits `name,metric,value` CSV lines; `*_check` lines assert the paper's
+qualitative claims and the driver exits non-zero if any check fails.
+"""
+import argparse
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced epochs/seeds for CI-speed runs")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset (table2,table3,fig2,...)")
+    args, _ = ap.parse_known_args()
+    if args.fast:
+        os.environ.setdefault("REPRO_BENCH_EPOCHS", "6")
+        os.environ.setdefault("REPRO_BENCH_SEEDS", "1")
+
+    from benchmarks import (alpha_sweep, appendixB_privacy,
+                            combined_compression, error_feedback, fig2_toy,
+                            fig4_convergence, fig5_distribution,
+                            roofline_report, table2_sizes, table3_accuracy,
+                            table7_dbpedia_geometry)
+
+    sections = {
+        "table2": table2_sizes.main,
+        "fig2": fig2_toy.main,
+        "table3": table3_accuracy.main,
+        "fig4": fig4_convergence.main,
+        "fig5": fig5_distribution.main,
+        "alpha": alpha_sweep.main,
+        "combined": combined_compression.main,
+        "ef": error_feedback.main,
+        "table7": table7_dbpedia_geometry.main,
+        "privacy": appendixB_privacy.main,
+        "roofline": roofline_report.main,
+    }
+    chosen = (args.only.split(",") if args.only else list(sections))
+
+    lines = []
+
+    def emit(msg):
+        print(msg, flush=True)
+        lines.append(str(msg))
+
+    t0 = time.time()
+    for name in chosen:
+        emit(f"## section {name}")
+        sections[name](emit=emit)
+        emit(f"## section {name} done ({time.time()-t0:.0f}s elapsed)")
+
+    failures = [l for l in lines if "_check" in l and l.endswith("False")]
+    emit(f"## {len(failures)} failed checks")
+    for f in failures:
+        emit("FAILED: " + f)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

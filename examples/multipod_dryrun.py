@@ -1,0 +1,23 @@
+"""Production-mesh walkthrough: lower + compile one architecture on the
+2-pod 512-chip mesh with the RandTopk cut transfer crossing the pod
+boundary, and print its roofline terms.
+
+    PYTHONPATH=src python examples/multipod_dryrun.py [arch] [shape]
+"""
+import sys
+
+from repro.launch import dryrun  # sets XLA_FLAGS before jax init
+
+
+def main():
+    arch = sys.argv[1] if len(sys.argv) > 1 else "qwen3-8b"
+    shape = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+    roof = dryrun.run_combo(arch, shape, multi_pod=True, split="randtopk",
+                            k=64)
+    row = roof.row()
+    print("\nsummary:", {k: row[k] for k in
+                         ("arch", "shape", "mesh", "bottleneck")})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Two-party vertical-federated-learning scenario — the paper's exact
+setting: a feature owner and a label owner jointly train a 100-class
+classifier, exchanging ONLY the compressed cut-layer payloads. Compares the
+methods of the paper at matched compressed size.
+
+    PYTHONPATH=src python examples/two_party_vfl.py
+"""
+from repro.data.synthetic import ManyClassDataset
+from repro.split.tabular import SplitSpec, train
+
+
+def main():
+    ds = ManyClassDataset(n_classes=100, in_dim=64, n_train=8000,
+                          n_test=2000, noise=0.3)
+    print("method          k    acc    size%   train-wire(MB)")
+    for method, kw in [
+        ("none", {}),
+        ("randtopk", dict(k=3, alpha=0.1)),
+        ("topk", dict(k=3)),
+        ("size_reduction", dict(k=3)),
+        ("quant", dict(quant_bits=4)),
+    ]:
+        spec = SplitSpec(method=method, hidden=512, lr=2e-3, **kw)
+        r = train(spec, ds, epochs=12, seed=0)
+        print(f"{method:15s} {kw.get('k','-'):>2} {r['test_acc']:.4f} "
+              f"{r['compressed_size_pct']:7.2f} "
+              f"{r['train_bytes']/1e6:10.1f}")
+
+
+if __name__ == "__main__":
+    main()

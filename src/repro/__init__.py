@@ -1,0 +1,4 @@
+"""repro: Randomized Top-k Sparsification for Split Learning (IJCAI'23) —
+a production-grade JAX training/inference framework with cut-layer
+compression as a first-class feature."""
+__version__ = "1.0.0"

@@ -1,0 +1,59 @@
+"""Pytree checkpointing: flat-key npz files with dtype/shape fidelity.
+
+Single-file-per-step layout; multi-host deployments write per-process shards
+(`proc{n}` suffix) — here process count is 1 so there is one shard.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.astype(np.float32)  # exact widening; restore re-narrows
+        flat[key] = arr
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree: Any) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp, path)
+    return path
+
+
+def restore(ckpt_dir: str, step: int, like: Any) -> Any:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    with np.load(path) as data:
+        flat = dict(data)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path_keys, leaf in leaves:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path_keys)
+        arr = flat[key]
+        assert arr.shape == leaf.shape, f"{key}: {arr.shape} != {leaf.shape}"
+        out.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out)
+
+
+def latest_step(ckpt_dir: str) -> int:
+    if not os.path.isdir(ckpt_dir):
+        return -1
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.npz$", f))]
+    return max(steps) if steps else -1

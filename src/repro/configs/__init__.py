@@ -1,0 +1,42 @@
+"""Architecture registry: the 10 assigned architectures (+ paper-scale
+split-learning configs). Each module exposes FULL (the exact assigned
+config) and SMOKE (a reduced same-family variant for CPU tests)."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "qwen3_moe_235b_a22b",
+    "zamba2_7b",
+    "granite_3_8b",
+    "yi_6b",
+    "granite_moe_1b_a400m",
+    "rwkv6_1p6b",
+    "llama_3_2_vision_90b",
+    "qwen3_8b",
+    "whisper_tiny",
+    "phi3_mini_3p8b",
+]
+
+_ALIASES = {
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "zamba2-7b": "zamba2_7b",
+    "granite-3-8b": "granite_3_8b",
+    "yi-6b": "yi_6b",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "rwkv6-1.6b": "rwkv6_1p6b",
+    "llama-3.2-vision-90b": "llama_3_2_vision_90b",
+    "qwen3-8b": "qwen3_8b",
+    "whisper-tiny": "whisper_tiny",
+    "phi3-mini-3.8b": "phi3_mini_3p8b",
+}
+
+
+def get(name: str, *, smoke: bool = False):
+    mod_name = _ALIASES.get(name, name.replace("-", "_").replace(".", "p"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.SMOKE if smoke else mod.FULL
+
+
+def all_archs():
+    return [get(a) for a in ARCHS]

@@ -1,0 +1,15 @@
+from repro.core.compressors import (
+    Compressor,
+    L1Reg,
+    Quantization,
+    RandTopK,
+    SizeReduction,
+    TopK,
+    make_compressor,
+)
+from repro.core import selection, wire
+
+__all__ = [
+    "Compressor", "L1Reg", "Quantization", "RandTopK", "SizeReduction",
+    "TopK", "make_compressor", "selection", "wire",
+]

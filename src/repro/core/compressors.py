@@ -1,0 +1,268 @@
+"""Cut-layer compressors for split learning (paper Sections 3-4).
+
+Each compressor is a frozen config object with a functional interface:
+
+    y, aux = comp.forward(x, key=key, training=True)
+
+`x` is the cut-layer activation `(..., d)`; `y` is the label-owner-side view
+(dense, with zeros in dropped slots, or dequantized values); `aux` carries
+whatever the backward pass and the wire-format need (mask / indices / scale).
+
+Backward semantics follow the paper exactly:
+  * size-reduction / top-k / randtopk: the gradient is masked with the SAME
+    support that was used in the forward pass (the label owner sends only the
+    k gradient values; indices are already known to the feature owner).
+    Realized naturally by autodiff through `x * stop_gradient(mask)`.
+  * quantization: forward quantize-dequantize; the backward gradient is sent
+    uncompressed, and the chain through the quantizer is the straight-through
+    estimator (identity), via jax.custom_vjp.
+  * L1: identity at training time + a `loss_penalty(x)` term; at inference the
+    support is the empirically-nonzero set (|x| > tol after training shrinks
+    activations toward zero).
+
+Compression ratios are reported by `fwd_bits`/`bwd_bits` (Table 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import selection
+
+FLOAT_BITS = 32  # N in the paper
+
+
+def _index_bits(d: int) -> int:
+    return max(1, math.ceil(math.log2(d)))
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """Base: identity (vanilla split learning, 'No compression')."""
+
+    name: str = "identity"
+
+    def forward(self, x, *, key=None, training=False):
+        return x, {}
+
+    def loss_penalty(self, x):
+        return jnp.zeros((), dtype=jnp.float32)
+
+    # -- wire accounting (bits per instance of dimension d) ------------------
+    def fwd_bits(self, d: int) -> float:
+        return d * FLOAT_BITS
+
+    def bwd_bits(self, d: int) -> float:
+        return d * FLOAT_BITS
+
+    def compressed_size(self, d: int) -> float:
+        """Mean of forward+backward relative compressed size (inference uses
+        fwd only; Table 2 reports the two separately — see wire.table2_row)."""
+        return 0.5 * (self.fwd_bits(d) + self.bwd_bits(d)) / (d * FLOAT_BITS)
+
+
+@dataclasses.dataclass(frozen=True)
+class SizeReduction(Compressor):
+    """Keep the first k features (mask-based cut-layer slimming, Eq. 1)."""
+
+    k: int = 8
+    name: str = "size_reduction"
+
+    def forward(self, x, *, key=None, training=False):
+        d = x.shape[-1]
+        mask = jnp.arange(d) < self.k
+        mask = jnp.broadcast_to(mask, x.shape)
+        y = x * jax.lax.stop_gradient(mask.astype(x.dtype))
+        return y, {"mask": mask}
+
+    def fwd_bits(self, d):
+        return self.k * FLOAT_BITS
+
+    def bwd_bits(self, d):
+        return self.k * FLOAT_BITS
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK(Compressor):
+    """Magnitude top-k sparsification (Eq. 3)."""
+
+    k: int = 8
+    name: str = "topk"
+
+    def _mask(self, x, key, training):
+        return selection.topk_mask(x, self.k)
+
+    def forward(self, x, *, key=None, training=False):
+        mask = self._mask(x, key, training)
+        y = x * jax.lax.stop_gradient(mask.astype(x.dtype))
+        return y, {"mask": mask}
+
+    def fwd_bits(self, d):
+        return self.k * (FLOAT_BITS + _index_bits(d))
+
+    def bwd_bits(self, d):
+        # feature owner already holds the indices
+        return self.k * FLOAT_BITS
+
+
+@dataclasses.dataclass(frozen=True)
+class RandTopK(TopK):
+    """Randomized top-k sparsification — the paper's contribution (Eq. 7).
+
+    alpha=0 -> TopK; alpha=1 -> Dropout-like. Randomness only in training.
+    """
+
+    alpha: float = 0.1
+    name: str = "randtopk"
+
+    def _mask(self, x, key, training):
+        if not training:
+            return selection.topk_mask(x, self.k)
+        if key is None:
+            raise ValueError("RandTopK.forward(training=True) needs a PRNG key")
+        return selection.randtopk_mask(x, self.k, self.alpha, key)
+
+
+def _quant_fwd(x, bits: int):
+    """Uniform quantization (Eq. 2) with per-instance [min, max] range."""
+    xf = x.astype(jnp.float32)
+    lo = jnp.min(xf, axis=-1, keepdims=True)
+    hi = jnp.max(xf, axis=-1, keepdims=True)
+    n_bins = 2 ** bits
+    step = (hi - lo) / n_bins
+    step = jnp.where(step <= 0, 1.0, step)
+    code = jnp.clip(jnp.floor((xf - lo) / step), 0, n_bins - 1)
+    deq = lo + (code + 0.5) * step
+    return deq.astype(x.dtype), code.astype(jnp.int32), lo, step
+
+
+@jax.custom_vjp
+def _quant_ste(x, bits: int):
+    return _quant_fwd(x, bits)[0]
+
+
+def _quant_ste_fwd(x, bits):
+    return _quant_ste(x, bits), None
+
+
+def _quant_ste_bwd(_, g):
+    return (g, None)
+
+
+_quant_ste.defvjp(_quant_ste_fwd, _quant_ste_bwd)
+
+
+@dataclasses.dataclass(frozen=True)
+class Quantization(Compressor):
+    """b-bit uniform quantization of the forward activation; backward is the
+    full-precision gradient (paper applies quantization forward-only)."""
+
+    bits: int = 4
+    name: str = "quant"
+
+    def forward(self, x, *, key=None, training=False):
+        y = _quant_ste(x, self.bits)
+        return y, {}
+
+    def fwd_bits(self, d):
+        # codes + the (lo, step) range floats, amortized over the instance
+        return d * self.bits + 2 * FLOAT_BITS
+
+    def bwd_bits(self, d):
+        return d * FLOAT_BITS
+
+
+@dataclasses.dataclass(frozen=True)
+class L1Reg(Compressor):
+    """L1 regularization on the cut activation. Identity transport during
+    training (+ penalty in the loss); at inference the wire carries the
+    empirically non-zero support."""
+
+    lam: float = 1e-3
+    tol: float = 1e-6
+    name: str = "l1"
+
+    def forward(self, x, *, key=None, training=False):
+        if training:
+            return x, {}
+        mask = jnp.abs(x) > self.tol
+        return x * mask.astype(x.dtype), {"mask": mask}
+
+    def loss_penalty(self, x):
+        return self.lam * jnp.sum(jnp.abs(x.astype(jnp.float32))) / x.shape[0]
+
+    def measured_fwd_bits(self, x) -> jax.Array:
+        """Data-dependent compressed size (the paper reports its std)."""
+        d = x.shape[-1]
+        nnz = jnp.sum((jnp.abs(x) > self.tol).astype(jnp.float32), axis=-1)
+        return nnz * (FLOAT_BITS + _index_bits(d))
+
+    def fwd_bits(self, d):  # not statically known; report worst case
+        return d * (FLOAT_BITS + _index_bits(d))
+
+    def bwd_bits(self, d):
+        return d * FLOAT_BITS
+
+
+@dataclasses.dataclass(frozen=True)
+class RandTopKQuant(RandTopK):
+    """Beyond-paper: RandTopk + b-bit quantization of the surviving values
+    (the combination the paper's conclusion names as promising future work).
+
+    Wire: k codes of `bits` + k indices + per-instance (lo, step) header;
+    at matched bytes this affords a ~(32+r)/(bits+r) times larger support k.
+    Backward: gradient on the selected support, full precision (masked),
+    STE through the value quantizer.
+    """
+
+    bits: int = 8
+    name: str = "randtopk_quant"
+
+    def forward(self, x, *, key=None, training=False):
+        mask = self._mask(x, key, training)
+        maskf = jax.lax.stop_gradient(mask.astype(x.dtype))
+        # quantize using the range of the SELECTED values only (tighter bins)
+        sel = jnp.where(mask, x, jnp.nan)
+        lo = jnp.nanmin(sel.astype(jnp.float32), axis=-1, keepdims=True)
+        hi = jnp.nanmax(sel.astype(jnp.float32), axis=-1, keepdims=True)
+        n_bins = 2 ** self.bits
+        step = jnp.where(hi > lo, (hi - lo) / n_bins, 1.0)
+        code = jnp.clip(jnp.floor((x.astype(jnp.float32) - lo) / step),
+                        0, n_bins - 1)
+        deq = (lo + (code + 0.5) * step).astype(x.dtype)
+        y = jax.lax.stop_gradient(deq - x) + x        # STE on values
+        return y * maskf, {"mask": mask}
+
+    def fwd_bits(self, d):
+        return self.k * (self.bits + _index_bits(d)) + 2 * FLOAT_BITS
+
+    def bwd_bits(self, d):
+        return self.k * FLOAT_BITS
+
+
+def make_compressor(spec: Optional[str], **kw) -> Compressor:
+    """Factory: 'randtopk:k=8,alpha=0.1' style strings or kwargs."""
+    if spec is None or spec == "none" or spec == "identity":
+        return Compressor()
+    if ":" in spec:
+        name, args = spec.split(":", 1)
+        for item in args.split(","):
+            key, val = item.split("=")
+            kw.setdefault(key, float(val) if "." in val else int(val))
+    else:
+        name = spec
+    table = {
+        "size_reduction": SizeReduction,
+        "topk": TopK,
+        "randtopk": RandTopK,
+        "quant": Quantization,
+        "l1": L1Reg,
+        "randtopk_quant": RandTopKQuant,
+    }
+    if name not in table:
+        raise ValueError(f"unknown compressor {name!r}")
+    return table[name](**kw)

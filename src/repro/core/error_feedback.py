@@ -1,0 +1,43 @@
+"""Beyond-paper: error feedback (memory) for cut-layer sparsification.
+
+EF is the standard companion of biased compressors in distributed SGD
+(Stich et al. 2018 — cited by the paper but not applied to SL): the feature
+owner keeps the residual e_t of what compression dropped and adds it back
+before the next compression, so information is delayed rather than lost:
+
+    c_t = Comp(o_t + e_t);   e_{t+1} = (o_t + e_t) - c_t
+
+The paper never evaluates EF for split learning. It is NOT a free win here:
+in SL the "signal" is a per-sample activation, not a shared gradient vector,
+so the residual from one minibatch pairs with a DIFFERENT minibatch next
+step. We evaluate a per-CLASS residual memory (tokens of the same label
+share an error slot) — the closest meaningful SL analogue — and report
+whether it helps at high compression (see benchmarks/error_feedback.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import selection
+
+
+def ef_topk_forward(o, err, labels, k: int, n_slots: int):
+    """Per-class error-feedback top-k.
+
+    o: (B, d) cut activations; err: (n_slots, d) residual memory;
+    labels: (B,) int — slot assignment. Returns (view, new_err).
+    """
+    e_b = jnp.take(err, labels, axis=0)                    # (B, d)
+    corrected = o + e_b
+    mask = selection.topk_mask(corrected, k)
+    view = corrected * mask.astype(o.dtype)
+    resid = corrected - view                               # what was dropped
+    # scatter-mean residuals back into the per-class slots
+    ones = jnp.ones((o.shape[0],), o.dtype)
+    counts = jnp.zeros((n_slots,), o.dtype).at[labels].add(ones)
+    sums = jnp.zeros((n_slots, o.shape[-1]), o.dtype).at[labels].add(resid)
+    new_err = jnp.where(counts[:, None] > 0,
+                        sums / jnp.maximum(counts[:, None], 1.0),
+                        err)
+    return view, mask, new_err

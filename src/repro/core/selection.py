@@ -1,0 +1,100 @@
+"""Element-selection primitives for cut-layer sparsification.
+
+All functions operate on the LAST axis (the instance feature axis `d` in the
+paper) and are fully batched over leading axes. Top-k is by magnitude, as in
+the paper ("preserve top-k elements ... in terms of magnitude").
+
+TPU adaptation: the randomized selection of Eq. (7) — k sequential draws
+without replacement, each draw picking the top-k pool w.p. (1 - alpha) — is
+vectorized exactly:
+
+  * the number of non-top-k picks is m ~ Binomial(k, alpha) (the per-draw pool
+    choice in Eq. 7 is i.i.d. Bernoulli(alpha); only the *within-pool*
+    distribution renormalizes as pools deplete), clipped to the pool sizes;
+  * uniform-without-replacement within a pool == Gumbel-top-m on uniform
+    weights (exponential race), which is branch-free and layout-friendly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = float("-inf")
+
+
+def topk_mask(x: jax.Array, k: int) -> jax.Array:
+    """Boolean mask of the k largest-|x| elements along the last axis."""
+    d = x.shape[-1]
+    if k >= d:
+        return jnp.ones_like(x, dtype=bool)
+    mag = jnp.abs(x).astype(jnp.float32)
+    kth = jax.lax.top_k(mag, k)[0][..., -1:]
+    # Break ties deterministically: strictly-greater always in; equal-to-kth
+    # admitted left-to-right until k elements are set.
+    gt = mag > kth
+    eq = mag == kth
+    need = k - jnp.sum(gt, axis=-1, keepdims=True)
+    eq_rank = jnp.cumsum(eq.astype(jnp.int32), axis=-1)
+    return gt | (eq & (eq_rank <= need))
+
+
+def topk_values_indices(x: jax.Array, k: int):
+    """(values, indices) of the top-k |x| elements — the wire payload."""
+    mag = jnp.abs(x).astype(jnp.float32)
+    _, idx = jax.lax.top_k(mag, k)
+    vals = jnp.take_along_axis(x, idx, axis=-1)
+    return vals, idx
+
+
+def mask_from_indices(idx: jax.Array, d: int) -> jax.Array:
+    """Scatter boolean mask of shape (..., d) from integer indices (..., k)."""
+    onehot = jax.nn.one_hot(idx, d, dtype=bool)
+    return jnp.any(onehot, axis=-2)
+
+
+def _select_m_from_pool(scores: jax.Array, pool: jax.Array, m: jax.Array, k: int):
+    """Select exactly `m` elements uniformly w/o replacement from `pool`.
+
+    scores : i.i.d. Gumbel noise, shape (..., d)
+    pool   : bool  (..., d)
+    m      : int32 (..., 1), 0 <= m <= min(k, pool size)
+    Returns a bool mask. Uses the m-th largest in-pool Gumbel as threshold.
+    """
+    s = jnp.where(pool, scores, _NEG_INF)
+    top = jax.lax.top_k(s, k)[0]                      # (..., k) sorted desc
+    # threshold = m-th largest (1-based); m == 0 -> select nothing
+    gather = jnp.clip(m - 1, 0, k - 1)
+    thr = jnp.take_along_axis(top, gather, axis=-1)   # (..., 1)
+    sel = s >= thr
+    return jnp.where(m > 0, sel, jnp.zeros_like(sel))
+
+
+def randtopk_mask(x: jax.Array, k: int, alpha: float, key: jax.Array) -> jax.Array:
+    """Randomized top-k selection mask, Eq. (7) of the paper.
+
+    Each of the k draws (without replacement) picks a top-k element with
+    probability 1-alpha (uniform within the remaining top-k pool) and a
+    non-top-k element with probability alpha (uniform within the remaining
+    non-top-k pool). Exactly k elements are selected.
+    """
+    d = x.shape[-1]
+    if k >= d:
+        return jnp.ones_like(x, dtype=bool)
+    kb, kg = jax.random.split(key)
+    is_top = topk_mask(x, k)
+
+    # m ~ Binomial(k, alpha), one per instance, clipped to the non-top pool.
+    draws = jax.random.bernoulli(kb, alpha, x.shape[:-1] + (k,))
+    m = jnp.sum(draws.astype(jnp.int32), axis=-1, keepdims=True)
+    m = jnp.clip(m, 0, min(k, d - k))
+
+    g = jax.random.gumbel(kg, x.shape, dtype=jnp.float32)
+    sel_top = _select_m_from_pool(g, is_top, k - m, k)
+    sel_non = _select_m_from_pool(g, ~is_top, m, k)
+    return sel_top | sel_non
+
+
+def kth_magnitude_threshold(x: jax.Array, k: int) -> jax.Array:
+    """|x| value of the k-th largest element (the Pallas kernel's oracle)."""
+    mag = jnp.abs(x).astype(jnp.float32)
+    return jax.lax.top_k(mag, k)[0][..., -1]

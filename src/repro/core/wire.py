@@ -1,0 +1,115 @@
+"""Byte-exact wire format for the compressed cut-layer payloads (Table 2).
+
+The on-device compute path keeps dense/padded forms (TPUs have no sub-byte
+addressing); this module is the host-side serialization that a real two-party
+deployment puts on the socket, and the source of truth for the compressed-size
+numbers reported in EXPERIMENTS.md. Offset/index encoding uses
+r = ceil(log2 d) bits per index, bit-packed, exactly as the paper assumes.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+FLOAT_BITS = 32
+
+
+def index_bits(d: int) -> int:
+    return max(1, math.ceil(math.log2(d)))
+
+
+def _pack_bits(vals: np.ndarray, width: int) -> bytes:
+    """Pack unsigned ints (any shape) into a bitstream, `width` bits each."""
+    vals = vals.astype(np.uint64).ravel()
+    nbits = int(vals.size) * width
+    out = np.zeros((nbits + 7) // 8, dtype=np.uint8)
+    for i, v in enumerate(vals.tolist()):
+        base = i * width
+        for b in range(width):
+            if (v >> b) & 1:
+                out[(base + b) >> 3] |= 1 << ((base + b) & 7)
+    return out.tobytes()
+
+
+def _unpack_bits(buf: bytes, width: int, count: int) -> np.ndarray:
+    arr = np.frombuffer(buf, dtype=np.uint8)
+    out = np.zeros(count, dtype=np.uint64)
+    for i in range(count):
+        base = i * width
+        v = 0
+        for b in range(width):
+            if arr[(base + b) >> 3] & (1 << ((base + b) & 7)):
+                v |= 1 << b
+        out[i] = v
+    return out
+
+
+def encode_sparse(values: np.ndarray, indices: np.ndarray, d: int) -> bytes:
+    """Paper's Encode for top-k style payloads: k float32 + k packed indices."""
+    assert values.shape == indices.shape
+    vb = values.astype("<f4").tobytes()
+    ib = _pack_bits(indices, index_bits(d))
+    return vb + ib
+
+
+def decode_sparse(buf: bytes, k_total: int, d: int):
+    vb = buf[: 4 * k_total]
+    values = np.frombuffer(vb, dtype="<f4").copy()
+    indices = _unpack_bits(buf[4 * k_total:], index_bits(d), k_total)
+    return values, indices.astype(np.int64)
+
+
+def sparse_to_dense(values, indices, shape_last_d: int):
+    dense = np.zeros(values.shape[:-1] + (shape_last_d,), dtype=np.float32)
+    np.put_along_axis(dense, indices.astype(np.int64), values, axis=-1)
+    return dense
+
+
+def encode_quant(codes: np.ndarray, lo: np.ndarray, step: np.ndarray, bits: int) -> bytes:
+    head = np.stack([lo, step], axis=-1).astype("<f4").tobytes()
+    return head + _pack_bits(codes, bits)
+
+
+def decode_quant(buf: bytes, n_instances: int, d: int, bits: int):
+    head = np.frombuffer(buf[: 8 * n_instances], dtype="<f4").reshape(n_instances, 2)
+    codes = _unpack_bits(buf[8 * n_instances:], bits, n_instances * d)
+    codes = codes.reshape(n_instances, d).astype(np.float32)
+    lo, step = head[:, :1], head[:, 1:]
+    return lo + (codes + 0.5) * step
+
+
+# ---------------------------------------------------------------------------
+# Table-2 analytic sizes (relative to d * 32 bits), per instance.
+# ---------------------------------------------------------------------------
+
+def table2_row(method: str, d: int, *, k: int = 0, bits: int = 0) -> dict:
+    r = index_bits(d)
+    n = FLOAT_BITS
+    if method == "size_reduction":
+        fwd = bwd = k / d
+    elif method in ("topk", "randtopk"):
+        fwd = k / d * (1 + r / n)
+        bwd = k / d
+    elif method == "quant":
+        fwd = bits / n  # paper writes 2^b/N with b meaning bits-per-value grid
+        bwd = 1.0
+    elif method == "l1":
+        fwd = k / d * (1 + r / n)  # k = measured nnz
+        bwd = 1.0
+    elif method == "randtopk_quant":
+        fwd = (k * (bits + r) + 2 * n) / (d * n)
+        bwd = k / d
+    elif method == "identity":
+        fwd = bwd = 1.0
+    else:
+        raise ValueError(method)
+    return {"method": method, "fwd": fwd, "bwd": bwd}
+
+
+def bytes_per_step(method: str, d: int, n_instances: int, *, k: int = 0,
+                   bits: int = 0, training: bool = True) -> float:
+    """Wire bytes for one batch step (fwd + optionally bwd)."""
+    row = table2_row(method, d, k=k, bits=bits)
+    per_inst = row["fwd"] + (row["bwd"] if training else 0.0)
+    return per_inst * d * FLOAT_BITS / 8 * n_instances

@@ -1,0 +1,4 @@
+from repro.data.pipeline import TokenPipeline, make_lm_batch
+from repro.data.synthetic import ManyClassDataset
+
+__all__ = ["TokenPipeline", "make_lm_batch", "ManyClassDataset"]

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: fused causal flash attention (forward).
+
+The roofline analysis (EXPERIMENTS.md §Roofline) shows prefill/train memory
+terms dominated by materialized (q-block x S) score tensors — the pure-JAX
+attention writes them to HBM. This kernel keeps score tiles in VMEM with the
+standard online-softmax recurrence:
+
+  grid = (batch, q_heads, S/BQ); the kernel body loops over KV blocks with
+  running (max, sumexp, acc) carries; only q/k/v tiles and the (BQ, hd)
+  output ever touch HBM. GQA is handled by indexing the kv head = q_head //
+  (Hq/Hkv) in the BlockSpec index map. Supports causal masking and sliding
+  windows. bf16 in / f32 accumulate (MXU semantics).
+
+Validated against `ref.py` (the model's `_sdpa` oracle) in interpret mode;
+on a TPU runtime pass interpret=False for the Mosaic kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, seq: int,
+                  window: int, causal: bool):
+    iq = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32)             # (BQ, hd)
+    hd = q.shape[-1]
+    q = q * (hd ** -0.5)
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, hd), jnp.float32)
+
+    n_kv = seq // bk
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[0, 0, pl.dslice(j * bk, bk), :].astype(jnp.float32)
+        v = v_ref[0, 0, pl.dslice(j * bk, bk), :].astype(jnp.float32)
+        s = q @ k.T                                 # (BQ, BK)
+        q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        scale = jnp.exp(m - m_new)
+        l_new = l * scale + jnp.sum(p, axis=-1)
+        acc_new = acc * scale[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, n_kv, body, (m0, l0, acc0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128, interpret: bool = True):
+    """q: (B, S, Hq, hd); k/v: (B, S, Hkv, hd) -> (B, S, Hq, hd).
+
+    S must divide bq and bk (pad upstream); GQA via head-index mapping.
+    """
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0
+
+    # layout: (B, H, S, hd) blocks
+    qt = q.swapaxes(1, 2)                           # (B, Hq, S, hd)
+    kt = k.swapaxes(1, 2)
+    vt = v.swapaxes(1, 2)
+
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, seq=S,
+                               window=window, causal=causal)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hq, S // bq),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, S, hd), lambda b, h, i: (b, h // g, 0, 0)),
+            pl.BlockSpec((1, 1, S, hd), lambda b, h, i: (b, h // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, S, hd), q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.swapaxes(1, 2)

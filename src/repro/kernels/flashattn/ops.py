@@ -1,0 +1,14 @@
+"""jit'd wrapper for the flash-attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flashattn import kernel
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, interpret=True):
+    return kernel.flash_attention(q, k, v, causal=causal, window=window,
+                                  interpret=interpret)

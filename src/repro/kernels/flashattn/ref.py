@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the flash-attention kernel (the model's _sdpa)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, causal=True, window=0):
+    """q: (B,S,Hq,hd), k/v: (B,S,Hkv,hd) -> (B,S,Hq,hd); f32 softmax."""
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, g, hd)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) / (hd ** 0.5)
+    pos = jnp.arange(S)
+    mask = pos[None, :] <= pos[:, None] if causal else jnp.ones((S, S), bool)
+    if window:
+        mask &= pos[None, :] > pos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jnp.exp(logits - logits.max(-1, keepdims=True))
+    w = w / w.sum(-1, keepdims=True)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, Hq, hd).astype(q.dtype)

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: fused per-instance uniform quantize / dequantize.
+
+One VMEM pass computes the per-row [min, max] range, the b-bit codes, and
+the dequantized values (Eq. 2 of the paper) — on GPU this is three kernel
+launches; on TPU it is one VMEM-resident fusion per row tile. Codes are
+emitted as uint8 (TPU has no sub-byte addressing; wire packing to b bits is
+host-side, core/wire.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, code_ref, deq_ref, lo_ref, step_ref, *, bits: int):
+    x = x_ref[...].astype(jnp.float32)                 # (br, d)
+    lo = jnp.min(x, axis=-1, keepdims=True)
+    hi = jnp.max(x, axis=-1, keepdims=True)
+    n_bins = 2 ** bits
+    step = (hi - lo) / n_bins
+    step = jnp.where(step <= 0, 1.0, step)
+    code = jnp.clip(jnp.floor((x - lo) / step), 0, n_bins - 1)
+    code_ref[...] = code.astype(jnp.uint8)
+    deq_ref[...] = (lo + (code + 0.5) * step).astype(x_ref.dtype)
+    lo_ref[...] = lo[..., 0]
+    step_ref[...] = step[..., 0]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_rows",
+                                             "interpret"))
+def quantize(x, bits: int = 8, *, block_rows: int = 128,
+             interpret: bool = True):
+    """x: (..., d) -> (codes uint8, dequantized, lo (...,), step (...,))."""
+    assert bits <= 8, "codes are uint8 on-device"
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    grid = (x2.shape[0] // br,)
+    code, deq, lo, step = pl.pallas_call(
+        functools.partial(_quant_kernel, bits=bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((br, d), lambda i: (i, 0)),
+                   pl.BlockSpec((br, d), lambda i: (i, 0)),
+                   pl.BlockSpec((br,), lambda i: (i,)),
+                   pl.BlockSpec((br,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((x2.shape[0], d), jnp.uint8),
+                   jax.ShapeDtypeStruct((x2.shape[0], d), x.dtype),
+                   jax.ShapeDtypeStruct((x2.shape[0],), jnp.float32),
+                   jax.ShapeDtypeStruct((x2.shape[0],), jnp.float32)],
+        interpret=interpret,
+    )(x2)
+    if pad:
+        code, deq, lo, step = (code[:rows], deq[:rows], lo[:rows],
+                               step[:rows])
+    return (code.reshape(orig_shape), deq.reshape(orig_shape),
+            lo.reshape(orig_shape[:-1]), step.reshape(orig_shape[:-1]))

@@ -1,0 +1,14 @@
+"""jit'd public wrapper for the quantization kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.quant import kernel
+
+
+@partial(jax.jit, static_argnames=("bits", "interpret"))
+def quantize_dequantize(x, bits: int = 8, *, interpret: bool = True):
+    _, deq, _, _ = kernel.quantize(x, bits, interpret=interpret)
+    return deq

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the quantization kernel (Eq. 2)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize(x, bits: int = 8):
+    xf = x.astype(jnp.float32)
+    lo = jnp.min(xf, axis=-1, keepdims=True)
+    hi = jnp.max(xf, axis=-1, keepdims=True)
+    n_bins = 2 ** bits
+    step = (hi - lo) / n_bins
+    step = jnp.where(step <= 0, 1.0, step)
+    code = jnp.clip(jnp.floor((xf - lo) / step), 0, n_bins - 1)
+    deq = (lo + (code + 0.5) * step).astype(x.dtype)
+    return (code.astype(jnp.uint8), deq, lo[..., 0], step[..., 0])

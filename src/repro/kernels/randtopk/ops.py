@@ -1,0 +1,38 @@
+"""jit'd public wrappers around the randtopk Pallas kernel.
+
+The kernel produces the deterministic top-k support; the Eq. (7)
+randomization (Binomial pool split + Gumbel race) composes on top in plain
+jnp — it is O(d) elementwise and not a hot spot.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import selection
+from repro.kernels.randtopk import kernel
+
+
+@partial(jax.jit, static_argnames=("k", "interpret"))
+def topk_mask(x, k: int, *, interpret: bool = True):
+    mask, _ = kernel.topk_mask_threshold(x, k, interpret=interpret)
+    return mask
+
+
+@partial(jax.jit, static_argnames=("k", "alpha", "interpret"))
+def randtopk_mask(x, k: int, alpha: float, key, *, interpret: bool = True):
+    """Kernel-backed Eq. (7) selection mask."""
+    d = x.shape[-1]
+    if k >= d:
+        return jnp.ones_like(x, dtype=bool)
+    is_top, _ = kernel.topk_mask_threshold(x, k, interpret=interpret)
+    kb, kg = jax.random.split(key)
+    draws = jax.random.bernoulli(kb, alpha, x.shape[:-1] + (k,))
+    m = jnp.clip(jnp.sum(draws.astype(jnp.int32), axis=-1, keepdims=True),
+                 0, min(k, d - k))
+    g = jax.random.gumbel(kg, x.shape, dtype=jnp.float32)
+    sel_top = selection._select_m_from_pool(g, is_top, k - m, k)
+    sel_non = selection._select_m_from_pool(g, ~is_top, m, k)
+    return sel_top | sel_non

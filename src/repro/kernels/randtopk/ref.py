@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the randtopk kernels."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import selection
+
+
+def topk_mask(x, k: int):
+    return selection.topk_mask(x, k)
+
+
+def kth_threshold(x, k: int):
+    return selection.kth_magnitude_threshold(x, k)
+
+
+def randtopk_mask(x, k: int, alpha: float, key):
+    return selection.randtopk_mask(x, k, alpha, key)

@@ -1,0 +1,164 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           # keep bf16 dots/collectives bf16 (TPU semantics);
+                           # the host backend otherwise upcasts to f32
+                           "--xla_allow_excess_precision=false")
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, print memory/cost analyses, and emit roofline rows.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --json out.json
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+import repro.configs as configs
+from repro.launch import specs as specs_mod
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_serve_step, make_train_step
+from repro.models.config import Runtime, SplitConfig
+from repro.roofline import analysis
+
+
+def _cut_for(cfg):
+    if cfg.family == "vlm":
+        g = cfg.cross_attn_every
+        return max(g, (cfg.n_layers // 2) // g * g)
+    return max(1, cfg.n_layers // 2)
+
+
+def build_config(arch: str, shape_name: str, *, split: str = None, k: int = 64,
+                 alpha: float = 0.1, cut: int = -1):
+    cfg = configs.get(arch)
+    shape = specs_mod.SHAPES[shape_name]
+    cfg = specs_mod.adapt_config(cfg, shape)
+    if split:
+        cut_layer = cut if cut > 0 else _cut_for(cfg)
+        cfg = cfg.with_(split=SplitConfig(
+            cut_layer=cut_layer, compressor=split, k=k, alpha=alpha))
+    return cfg, shape
+
+
+def lower_one(cfg, shape, mesh, *, runtime_kw=None):
+    """Lower + compile one (cfg, shape, mesh). Returns (compiled, rt)."""
+    kw = dict(runtime_kw or {})
+    kw.setdefault("seq_shard", shape.kind != "decode")
+    rt = Runtime(mesh=mesh, training=(shape.kind == "train"), **kw)
+    with mesh:
+        if shape.kind == "train":
+            step = make_train_step(cfg, rt, internal_key=True)
+            args, in_sh = specs_mod.train_specs(cfg, shape, rt)
+            jitted = jax.jit(step, in_shardings=in_sh,
+                             donate_argnums=(0, 1))
+        elif shape.kind == "prefill":
+            from repro.split import model as split_model
+
+            def prefill(params, batch):
+                logits, _ = split_model.forward(params, cfg, rt, batch,
+                                                key=None)
+                return logits
+
+            p_abs = specs_mod.abstract_params(cfg)
+            pspec = __import__("repro.models.transformer",
+                               fromlist=["param_spec"]).param_spec(cfg)
+            args = (p_abs, specs_mod.batch_specs(cfg, shape, rt))
+            in_sh = (specs_mod.spec_to_shardings(pspec, mesh),
+                     specs_mod.batch_shardings(cfg, rt))
+            jitted = jax.jit(prefill, in_shardings=in_sh)
+        else:  # decode
+            step = make_serve_step(cfg, rt)
+            args, in_sh = specs_mod.decode_specs(cfg, shape, rt)
+            jitted = jax.jit(step, in_shardings=in_sh, donate_argnums=(1,))
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    return compiled, rt
+
+
+def run_combo(arch: str, shape_name: str, *, multi_pod=False, split=None,
+              k=64, alpha=0.1, verbose=True, runtime_kw=None):
+    cfg, shape = build_config(arch, shape_name, split=split, k=k, alpha=alpha)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+    compiled, rt = lower_one(cfg, shape, mesh, runtime_kw=runtime_kw)
+    dt = time.time() - t0
+    tokens = shape.batch * (shape.seq if shape.kind != "decode" else 1)
+    mf = analysis.model_flops(cfg, tokens=tokens,
+                              training=(shape.kind == "train"))
+    hlo_text = compiled.as_text()
+    roof = analysis.from_compiled(
+        compiled, arch=arch, shape=shape_name,
+        mesh_desc="x".join(map(str, mesh.devices.shape)), chips=chips,
+        model_flops=mf, hlo_text=hlo_text,
+        bf16_target=(cfg.dtype == "bfloat16"))
+    if verbose:
+        mem = compiled.memory_analysis()
+        print(f"== {arch} x {shape_name} mesh={roof.mesh} "
+              f"(compile {dt:.1f}s) ==")
+        print(f"  memory_analysis: args={mem.argument_size_in_bytes/1e9:.2f}GB "
+              f"out={mem.output_size_in_bytes/1e9:.2f}GB "
+              f"temp={mem.temp_size_in_bytes/1e9:.2f}GB "
+              f"alias={mem.alias_size_in_bytes/1e9:.2f}GB")
+        r = roof.row()
+        print(f"  cost_analysis: flops={r['hlo_flops']:.3e} "
+              f"model_flops={r['model_flops']:.3e} "
+              f"useful={r['useful_ratio']:.2f}")
+        print(f"  roofline: compute={r['t_compute_s']*1e3:.2f}ms "
+              f"memory={r['t_memory_s']*1e3:.2f}ms "
+              f"collective={r['t_collective_s']*1e3:.2f}ms "
+              f"-> {r['bottleneck']}-bound")
+        print(f"  collectives: " + ", ".join(
+            f"{op}={b/1e9:.2f}GB" for op, b in r["coll_detail"].items()))
+    return roof
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--split", default=None,
+                    help="cut-layer compressor (randtopk/topk/...)")
+    ap.add_argument("--k", type=int, default=64)
+    ap.add_argument("--alpha", type=float, default=0.1)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    combos = []
+    if args.all:
+        for a in configs.ARCHS:
+            for s in specs_mod.SHAPES:
+                combos.append((a, s))
+    else:
+        combos.append((args.arch, args.shape))
+
+    rows, failures = [], []
+    for arch, shape in combos:
+        try:
+            roof = run_combo(arch, shape, multi_pod=args.multi_pod,
+                             split=args.split, k=args.k, alpha=args.alpha)
+            rows.append(roof.row())
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append((arch, shape, f"{type(e).__name__}: {e}"))
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": rows, "failures": failures}, f, indent=1)
+    print(f"\n{len(rows)} OK, {len(failures)} FAILED")
+    for a, s, e in failures:
+        print(f"  FAIL {a} x {s}: {e}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

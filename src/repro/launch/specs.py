@@ -1,0 +1,184 @@
+"""Input shapes, abstract (ShapeDtypeStruct) input specs, and sharding trees
+for every (architecture x input-shape) dry-run combination.
+
+Nothing here allocates device memory: params/optimizer/cache shapes come from
+`jax.eval_shape`, inputs are ShapeDtypeStructs, and shardings are derived from
+the logical param/cache spec trees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import transformer
+from repro.models.config import ArchConfig, Runtime
+from repro.optim import adamw_init
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str        # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# Sub-quadratic handling of long_500k (DESIGN.md §Shape skips):
+#   ssm/hybrid run natively (recurrent state); attention-bearing archs run
+#   the sliding-window variant (window 8192) which we implement first-class.
+LONG_CTX_WINDOW = 8192
+
+
+def adapt_config(cfg: ArchConfig, shape: ShapeSpec) -> ArchConfig:
+    """Per-shape architecture adaptation (e.g. sliding window for 500k)."""
+    if shape.name == "long_500k" and cfg.family != "ssm":
+        return cfg.with_(sliding_window=LONG_CTX_WINDOW)
+    return cfg
+
+
+def dp_only_spec(spec: P) -> P:
+    """ZeRO-3 param layout: drop TP ('model' -> None) and widen FSDP
+    ('data' -> ('data','model')) so params are fully sharded over the whole
+    mesh and SPMD all-gathers them per use."""
+    out = []
+    for entry in tuple(spec):
+        if entry == "model":
+            out.append(None)
+        elif entry == "data":
+            out.append(("data", "model"))
+        else:
+            out.append(entry)
+    return P(*out)
+
+
+def spec_to_shardings(spec_tree, mesh, *, dp_only=False):
+    def conv(s):
+        if dp_only:
+            s = dp_only_spec(s)
+        return NamedSharding(mesh, s)
+
+    return jax.tree_util.tree_map(
+        conv, spec_tree, is_leaf=lambda s: isinstance(s, P))
+
+
+def _sanitize_spec(spec: P, shape, mesh) -> P:
+    """Drop mesh axes that do not divide the argument dimension (pjit arg
+    shardings must divide exactly; internal constraints may still repartition
+    unevenly). E.g. a 4-way-GQA KV cache on a 16-way model axis, or batch=1
+    on the data axis, degrade to replicated on that dim."""
+    out = []
+    for i, entry in enumerate(tuple(spec)):
+        if entry is None or i >= len(shape):
+            out.append(entry)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        out.append(entry if shape[i] % n == 0 else None)
+    return P(*out)
+
+
+def sanitize_shardings(sharding_tree, abstract_tree, mesh):
+    """Leaf-wise divisibility repair of NamedSharding trees vs arg shapes."""
+    def fix(sh, ab):
+        if not isinstance(sh, NamedSharding):
+            return sh
+        return NamedSharding(mesh, _sanitize_spec(sh.spec, ab.shape, mesh))
+
+    return jax.tree_util.tree_map(fix, sharding_tree, abstract_tree)
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(
+        lambda: transformer.init_model(jax.random.key(0), cfg))
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec, rt: Runtime) -> Dict:
+    """ShapeDtypeStructs for the training/prefill batch."""
+    B, S = shape.batch, shape.seq
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    out = {"tokens": tok, "labels": tok}
+    if cfg.family == "vlm":
+        out["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_image_tokens, cfg.d_model), cfg.adtype())
+    if cfg.family == "audio":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_frames, cfg.d_model), cfg.adtype())
+    return out
+
+
+def batch_shardings(cfg: ArchConfig, rt: Runtime) -> Dict:
+    bp = rt.pspec("batch", None)
+    out = {"tokens": bp, "labels": bp}
+    if cfg.family == "vlm":
+        out["patches"] = rt.pspec("batch", None, None)
+    if cfg.family == "audio":
+        out["frames"] = rt.pspec("batch", None, None)
+    return spec_to_shardings(out, rt.mesh) if rt.mesh else out
+
+
+def opt_shardings(param_spec_tree, mesh, *, dp_only=False):
+    """AdamW moments share the param specs; step is replicated."""
+    return {
+        "mu": spec_to_shardings(param_spec_tree, mesh, dp_only=dp_only),
+        "nu": spec_to_shardings(param_spec_tree, mesh, dp_only=dp_only),
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def train_specs(cfg: ArchConfig, shape: ShapeSpec, rt: Runtime):
+    """(arg_shapes, in_shardings, out_shardings_hint) for train_step."""
+    params_abs = abstract_params(cfg)
+    opt_abs = jax.eval_shape(adamw_init, params_abs)
+    pspec = transformer.param_spec(cfg)
+    mesh = rt.mesh
+    p_sh = sanitize_shardings(
+        spec_to_shardings(pspec, mesh, dp_only=rt.dp_only), params_abs, mesh)
+    o_sh = sanitize_shardings(opt_shardings(pspec, mesh, dp_only=rt.dp_only),
+                              opt_abs, mesh)
+    b_abs = batch_specs(cfg, shape, rt)
+    b_sh = sanitize_shardings(batch_shardings(cfg, rt), b_abs, mesh)
+    args = (params_abs, opt_abs, b_abs)
+    in_sh = (p_sh, o_sh, b_sh)
+    return args, in_sh
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeSpec, rt: Runtime):
+    """(arg_shapes, in_shardings) for serve_step (one token w/ cache)."""
+    params_abs = abstract_params(cfg)
+    pspec = transformer.param_spec(cfg)
+    mesh = rt.mesh
+    B = shape.batch
+    extras = {}
+    if cfg.family == "vlm":
+        extras["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_image_tokens, cfg.d_model), cfg.adtype())
+    if cfg.family == "audio":
+        extras["enc_out"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_frames, cfg.d_model), cfg.adtype())
+    cache_abs = jax.eval_shape(
+        lambda p, e: transformer.init_cache(p, cfg, rt, B, shape.seq, e),
+        params_abs, extras)
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    c_sh = sanitize_shardings(
+        spec_to_shardings(transformer.cache_spec(cfg, rt), mesh), cache_abs,
+        mesh)
+    p_sh = sanitize_shardings(spec_to_shardings(pspec, mesh), params_abs,
+                              mesh)
+    t_sh = sanitize_shardings(
+        NamedSharding(mesh, rt.pspec("batch", None)), token, mesh)
+    args = (params_abs, cache_abs, token)
+    in_sh = (p_sh, c_sh, t_sh)
+    return args, in_sh

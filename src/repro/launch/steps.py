@@ -1,0 +1,63 @@
+"""jit-able train / serve step builders shared by trainer, dry-run, benches."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ArchConfig, Runtime
+from repro.optim import adamw_update
+from repro.split import model as split_model
+
+AUX_WEIGHT = 0.01  # MoE balance-loss weight
+
+
+def loss_fn(params, cfg: ArchConfig, rt: Runtime, batch, key):
+    logits, aux = split_model.forward(params, cfg, rt, batch, key=key)
+    ce = transformer.cross_entropy(logits, batch["labels"], rt)
+    return ce + AUX_WEIGHT * aux, (ce, aux)
+
+
+def make_train_step(cfg: ArchConfig, rt: Runtime, *, lr=3e-4,
+                    weight_decay=0.0, internal_key=False) -> Callable:
+    def _step(params, opt_state, batch, key):
+        (total, (ce, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, cfg, rt, batch, key)
+        new_params, new_opt, gnorm = adamw_update(
+            params, grads, opt_state, lr=lr, weight_decay=weight_decay)
+        metrics = {"loss": total, "ce": ce, "aux": aux, "grad_norm": gnorm}
+        return new_params, new_opt, metrics
+
+    if not internal_key:
+        return _step
+
+    def train_step(params, opt_state, batch):
+        # deterministic per-step key; keeps the jit signature key-free
+        key = jax.random.fold_in(jax.random.key(0), opt_state["step"])
+        return _step(params, opt_state, batch, key)
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig, rt: Runtime) -> Callable:
+    def serve_step(params, cache, token):
+        logits, new_cache = split_model.decode_step(params, cfg, rt, token,
+                                                    cache)
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_token[:, None], new_cache
+
+    return serve_step
+
+
+def make_eval_step(cfg: ArchConfig, rt: Runtime) -> Callable:
+    def eval_step(params, batch):
+        logits, _ = split_model.forward(params, cfg, rt, batch, key=None)
+        ce = transformer.cross_entropy(logits, batch["labels"], rt)
+        acc = jnp.mean(
+            (jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+        return {"ce": ce, "acc": acc}
+
+    return eval_step

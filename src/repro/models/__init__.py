@@ -1,0 +1,5 @@
+from repro.models import attention, common, config, mlp, moe, rwkv, ssm, transformer
+from repro.models.config import ArchConfig, Runtime, SplitConfig
+
+__all__ = ["attention", "common", "config", "mlp", "moe", "rwkv", "ssm",
+           "transformer", "ArchConfig", "Runtime", "SplitConfig"]

@@ -1,0 +1,254 @@
+"""GQA attention: RoPE, qk-norm, sliding window, KV cache, chunked prefill.
+
+Long-sequence training/prefill uses a query-chunked formulation (scan over
+query blocks, full softmax per block over the visible KV range) with per-chunk
+rematerialization, bounding peak memory at O(S * chunk) instead of O(S^2).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import common, tp
+from repro.models.config import ArchConfig, Runtime
+
+
+def init_attention(key, cfg: ArchConfig, *, cross=False, gated=False):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.pdtype()
+    ks = jax.random.split(key, 5)
+    p = {
+        "norm": common.init_norm(d, dt, cfg.norm),
+        "wq": common.normal_init(ks[0], (d, hq * hd), dt),
+        "wk": common.normal_init(ks[1], (d, hkv * hd), dt),
+        "wv": common.normal_init(ks[2], (d, hkv * hd), dt),
+        "wo": common.normal_init(ks[3], (hq * hd, d), dt,
+                                 scale=0.02 / max(1, cfg.n_layers) ** 0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((hd,), dt)}
+        p["k_norm"] = {"scale": jnp.ones((hd,), dt)}
+    if gated:
+        p["gate"] = jnp.zeros((), dt)
+    return p
+
+
+def attention_spec(cfg: ArchConfig, *, cross=False, gated=False):
+    p = {
+        "norm": common.norm_spec(cfg.norm),
+        "wq": P("data", "model"),
+        "wk": P("data", "model"),
+        "wv": P("data", "model"),
+        "wo": P("model", "data"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": P()}
+        p["k_norm"] = {"scale": P()}
+    if gated:
+        p["gate"] = P()
+    return p
+
+
+def _project_qkv(p, cfg: ArchConfig, xq, xkv, q_positions, kv_positions, *, rope=True):
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (xq @ p["wq"].astype(xq.dtype)).reshape(*xq.shape[:-1], hq, hd)
+    k = (xkv @ p["wk"].astype(xkv.dtype)).reshape(*xkv.shape[:-1], hkv, hd)
+    v = (xkv @ p["wv"].astype(xkv.dtype)).reshape(*xkv.shape[:-1], hkv, hd)
+    if cfg.qk_norm:
+        q = common.rms_norm(q, p["q_norm"]["scale"])
+        k = common.rms_norm(k, p["k_norm"]["scale"])
+    if rope:
+        q = common.apply_rope(q, q_positions, cfg.rope_theta)
+        k = common.apply_rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ArchConfig):
+    """q: (B,Sq,Hq,hd), k/v: (B,Skv,Hkv,hd), mask: (B?,1?,Sq,Skv) bool.
+
+    bf16 operands with f32 accumulation (MXU semantics) — avoids hauling
+    f32 copies of q/k/v through HBM and collectives."""
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = hq // hkv
+    B, Sq = q.shape[0], q.shape[1]
+    qg = q.reshape(B, Sq, hkv, g, hd)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) / (hd ** 0.5)
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, hq, hd).astype(q.dtype)
+
+
+def _causal_mask(q_pos, kv_pos, window: int):
+    """(Sq,) x (Skv,) -> (Sq, Skv) bool; window=0 means unbounded."""
+    m = kv_pos[None, :] <= q_pos[:, None]
+    if window:
+        m &= kv_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+def full_attention(p, cfg: ArchConfig, rt: Runtime, x, *, causal=True, rope=True):
+    """Training / prefill self-attention over (B, S, d)."""
+    B, S, _ = x.shape
+    pos = jnp.arange(S)
+    q, k, v = _project_qkv(p, cfg, x, x, pos[None], pos[None], rope=rope)
+    q = rt.shard(q, "batch", None, "model", None)
+    k = rt.shard(k, "batch", None, None, None)
+    v = rt.shard(v, "batch", None, None, None)
+
+    window = cfg.sliding_window
+    if S <= rt.attn_chunk or S % rt.attn_chunk != 0:
+        mask = _causal_mask(pos, pos, window) if causal else jnp.ones((S, S), bool)
+        out = _sdpa(q, k, v, jnp.broadcast_to(mask, (B, S, S)), cfg)
+    else:
+        c = rt.attn_chunk
+        assert S % c == 0, f"seq {S} must divide attn_chunk {c}"
+        qs = q.reshape(B, S // c, c, *q.shape[2:]).swapaxes(0, 1)
+
+        def chunk_body(carry, inp):
+            i, qc = inp
+            qpos = i * c + jnp.arange(c)
+            if causal:
+                mask = _causal_mask(qpos, pos, window)
+            else:
+                mask = jnp.ones((c, S), bool)
+            o = _sdpa(qc, k, v, jnp.broadcast_to(mask, (B, c, S)), cfg)
+            return carry, o
+
+        body = jax.checkpoint(chunk_body) if rt.remat else chunk_body
+        _, outs = jax.lax.scan(body, (), (jnp.arange(S // c), qs))
+        out = outs.swapaxes(0, 1).reshape(B, S, cfg.n_heads, cfg.hd)
+
+    y = tp.out_proj_rs(out.reshape(B, S, cfg.n_heads * cfg.hd), p["wo"], rt)
+    # reduce-scattered into the sequence-parallel domain (Megatron SP)
+    return rt.shard(y, "batch", "seq", None)
+
+
+def cross_attention(p, cfg: ArchConfig, rt: Runtime, x, kv_tokens=None, *,
+                    kv_cache=None, gated=False):
+    """Cross-attention: q from x (B,S,d); kv from kv_tokens (B,N,d) or a
+    precomputed (k, v) cache. No RoPE on cross attention."""
+    B, S, _ = x.shape
+    if kv_cache is not None:
+        k, v = kv_cache
+        N = k.shape[1]
+        q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, cfg.n_heads, cfg.hd)
+        if cfg.qk_norm:
+            q = common.rms_norm(q, p["q_norm"]["scale"])
+    else:
+        N = kv_tokens.shape[1]
+        q, k, v = _project_qkv(p, cfg, x, kv_tokens, None, None, rope=False)
+    mask = jnp.ones((B, S, N), bool)
+    out = _sdpa(q, k, v, mask, cfg)
+    y = tp.out_proj_rs(out.reshape(B, S, cfg.n_heads * cfg.hd), p["wo"], rt)
+    if gated:
+        y = jnp.tanh(p["gate"].astype(jnp.float32)).astype(y.dtype) * y
+    return rt.shard(y, "batch", "seq", None)
+
+
+def cross_kv(p, cfg: ArchConfig, kv_tokens):
+    """Precompute the cross-attention KV cache from encoder/image tokens."""
+    B, N, _ = kv_tokens.shape
+    k = (kv_tokens @ p["wk"].astype(kv_tokens.dtype)).reshape(B, N, cfg.n_kv_heads, cfg.hd)
+    v = (kv_tokens @ p["wv"].astype(kv_tokens.dtype)).reshape(B, N, cfg.n_kv_heads, cfg.hd)
+    if cfg.qk_norm:
+        k = common.rms_norm(k, p["k_norm"]["scale"])
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# Decode (single new token against a cache)
+# --------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int,
+                  *, bits: int = 16):
+    """Rolling cache; for sliding-window archs max_len = window size.
+
+    bits=8 stores int8 codes + per-(token, head) f32 scales (symmetric
+    quantization) — halves decode HBM footprint; dequantized on read."""
+    size = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    shape = (batch, size, cfg.n_kv_heads, cfg.hd)
+    if bits == 8:
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:3], jnp.float32),
+            "v_scale": jnp.zeros(shape[:3], jnp.float32),
+        }
+    return {
+        "k": jnp.zeros(shape, cfg.adtype()),
+        "v": jnp.zeros(shape, cfg.adtype()),
+    }
+
+
+def _quantize_kv(x):
+    """x: (B, 1, H, hd) -> (int8 codes, (B, 1, H) scale)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    safe = jnp.maximum(scale, 1e-9)
+    code = jnp.clip(jnp.round(x.astype(jnp.float32) / safe[..., None]),
+                    -127, 127).astype(jnp.int8)
+    return code, scale.astype(jnp.float32)
+
+
+def _dequantize_kv(code, scale, dtype):
+    return (code.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def kv_cache_spec(rt: Runtime, *, bits: int = 16):
+    # flash-decode layout: the cache SEQUENCE dim is sharded over 'model'
+    # (GQA kv-head counts of 4-8 cannot split a 16-way axis and would force
+    # full replication -> 16x the per-chip cache); each rank attends over its
+    # sequence slice and the softmax reductions lower to psums.
+    spec = {"k": rt.pspec("batch", "flashdecode", None, None),
+            "v": rt.pspec("batch", "flashdecode", None, None)}
+    if bits == 8:
+        spec["k_scale"] = rt.pspec("batch", "flashdecode", None)
+        spec["v_scale"] = rt.pspec("batch", "flashdecode", None)
+    return spec
+
+
+def decode_attention(p, cfg: ArchConfig, rt: Runtime, x_tok, cache, pos):
+    """x_tok: (B, 1, d); cache: {'k','v'} rolling buffers; pos: scalar int32
+    (absolute position of the new token). Returns (y, new_cache)."""
+    B = x_tok.shape[0]
+    size = cache["k"].shape[1]
+    quant = "k_scale" in cache
+    q, k_new, v_new = _project_qkv(
+        p, cfg, x_tok, x_tok, jnp.full((1, 1), pos), jnp.full((1, 1), pos))
+    slot = (pos % size).astype(jnp.int32)
+    new_cache = {}
+    if quant:
+        kc, ks = _quantize_kv(k_new)
+        vc, vs = _quantize_kv(v_new)
+        kcode = jax.lax.dynamic_update_slice(cache["k"], kc, (0, slot, 0, 0))
+        vcode = jax.lax.dynamic_update_slice(cache["v"], vc, (0, slot, 0, 0))
+        kscale = jax.lax.dynamic_update_slice(cache["k_scale"], ks,
+                                              (0, slot, 0))
+        vscale = jax.lax.dynamic_update_slice(cache["v_scale"], vs,
+                                              (0, slot, 0))
+        new_cache.update(k=kcode, v=vcode, k_scale=kscale, v_scale=vscale)
+        k = _dequantize_kv(kcode, kscale, x_tok.dtype)
+        v = _dequantize_kv(vcode, vscale, x_tok.dtype)
+    else:
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+        new_cache.update(k=k, v=v)
+    k = rt.shard(k, "batch", "flashdecode", None, None)
+    v = rt.shard(v, "batch", "flashdecode", None, None)
+
+    # valid slots: absolute positions of each slot given the ring layout
+    idx = jnp.arange(size)
+    wraps = jnp.where(idx <= slot, pos - slot, pos - size - slot)
+    abs_pos = idx + wraps              # absolute position stored in each slot
+    valid = (abs_pos >= 0) & (abs_pos <= pos)
+    if cfg.sliding_window:
+        valid &= abs_pos > pos - cfg.sliding_window
+    mask = jnp.broadcast_to(valid[None, None, :], (B, 1, size))
+    out = _sdpa(q, k, v, mask, cfg)
+    y = out.reshape(B, 1, cfg.n_heads * cfg.hd) @ p["wo"].astype(x_tok.dtype)
+    return rt.shard(y, "batch", None, None), new_cache

@@ -1,0 +1,170 @@
+"""Architecture + runtime configuration dataclasses."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitConfig:
+    """Cut-layer placement + compression — the paper's technique as a
+    first-class framework feature."""
+
+    cut_layer: int = 0              # residual-stream boundary after this block index
+    compressor: str = "randtopk"    # see core.make_compressor
+    k: int = 64                     # non-zeros per token vector
+    alpha: float = 0.1              # RandTopk randomness (Eq. 7)
+    quant_bits: int = 4
+    l1_lam: float = 1e-4
+    transfer_over_pod: bool = True  # ppermute payload across the pod axis
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0               # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    norm: str = "rms"               # rms | layer
+    # --- MoE ---
+    n_experts: int = 0
+    topk_experts: int = 0
+    # --- SSM (mamba2) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    attn_every: int = 0             # zamba2: shared attn block every N mamba layers
+    # --- RWKV6 ---
+    rwkv: bool = False
+    rwkv_lora: int = 64
+    # --- VLM ---
+    cross_attn_every: int = 0       # a cross-attn layer every N layers
+    n_image_tokens: int = 0
+    # --- audio enc-dec ---
+    encdec: bool = False
+    n_enc_layers: int = 0
+    n_frames: int = 0
+    # --- attention variants ---
+    sliding_window: int = 0         # 0 = full causal attention
+    # --- numerics ---
+    param_dtype: str = "float32"
+    dtype: str = "float32"
+    # --- split learning ---
+    split: Optional[SplitConfig] = None
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding/unembedding tables are padded to a multiple of 256
+        (model-axis x lane-width friendly); logits over the pad slots train
+        toward -inf and are never sampled (labels < vocab)."""
+        return (self.vocab + 255) // 256 * 256
+
+    @property
+    def d_inner(self) -> int:  # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def with_(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    def adtype(self):
+        return jnp.dtype(self.dtype)
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    """Execution-environment knobs threaded through model code."""
+
+    mesh: Optional[jax.sharding.Mesh] = None
+    remat: bool = True
+    attn_chunk: int = 1024          # query-chunk length for long-sequence attention
+    ssm_chunk: int = 128            # SSD chunk length
+    rwkv_chunk: int = 16
+    rwkv_mode: str = "chunk"        # chunk (matrix form) | scan (sequential)
+    moe_capacity: float = 1.25
+    use_pallas: bool = False        # Pallas kernels (interpret on CPU) for hot spots
+    training: bool = True
+    seq_shard: bool = True          # Megatron-style sequence parallelism on the
+                                    # residual stream at layer boundaries (shards
+                                    # saved activations over 'model')
+    kv_cache_bits: int = 16         # 8 -> int8 KV cache (+ f32 scales): halves
+                                    # decode HBM footprint, ~1e-2 logit error
+    flash_decode: bool = True       # shard decode KV caches over 'model' on the
+                                    # SEQUENCE dim (GQA head counts can't split a
+                                    # 16-way axis; replication costs 16x memory)
+    dp_only: bool = False           # ZeRO-3 mode: the 'model' mesh axis joins the
+                                    # batch axes; params are fully sharded over all
+                                    # axes and gathered per use; no TP activation
+                                    # collectives (best for small-d archs)
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return tuple(self.mesh.axis_names) if self.mesh is not None else ()
+
+    @property
+    def batch_axes(self):
+        names = (("pod", "data", "model") if self.dp_only
+                 else ("pod", "data"))
+        ax = tuple(a for a in names if a in self.axis_names)
+        return ax if ax else None
+
+    @property
+    def has_model_axis(self) -> bool:
+        return "model" in self.axis_names
+
+    def pspec(self, *logical):
+        """Translate logical axis names -> PartitionSpec for the ambient mesh.
+
+        Logical names: 'batch' (pod+data), 'model', 'data', 'seq' (model axis
+        iff seq_shard — sequence parallelism), None.
+        """
+        from jax.sharding import PartitionSpec as P
+
+        if self.mesh is None:
+            return P()
+        out = []
+        for name in logical:
+            if name == "batch":
+                out.append(self.batch_axes)
+            elif name == "seq":
+                out.append("model" if (self.seq_shard and not self.dp_only and
+                                       "model" in self.axis_names) else None)
+            elif name == "flashdecode":
+                out.append("model" if (self.flash_decode and not self.dp_only
+                                       and "model" in self.axis_names)
+                           else None)
+            elif name == "model" and self.dp_only:
+                out.append(None)
+            elif name in ("model", "data", "pod"):
+                out.append(name if name in self.axis_names else None)
+            else:
+                out.append(None)
+        return P(*out)
+
+    def shard(self, x, *logical):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, self.pspec(*logical))
+        )

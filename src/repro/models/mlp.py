@@ -1,0 +1,47 @@
+"""SwiGLU / GELU MLP blocks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import common, tp
+from repro.models.config import ArchConfig, Runtime
+
+
+def init_mlp(key, cfg: ArchConfig, *, gated=False):
+    d, ff = cfg.d_model, cfg.d_ff
+    dt = cfg.pdtype()
+    ks = jax.random.split(key, 3)
+    p = {
+        "norm": common.init_norm(d, dt, cfg.norm),
+        "w_gate": common.normal_init(ks[0], (d, ff), dt),
+        "w_up": common.normal_init(ks[1], (d, ff), dt),
+        "w_down": common.normal_init(ks[2], (ff, d), dt,
+                                     scale=0.02 / max(1, cfg.n_layers) ** 0.5),
+    }
+    if gated:
+        p["gate"] = jnp.zeros((), dt)
+    return p
+
+
+def mlp_spec(cfg: ArchConfig, *, gated=False):
+    p = {
+        "norm": common.norm_spec(cfg.norm),
+        "w_gate": P("data", "model"),
+        "w_up": P("data", "model"),
+        "w_down": P("model", "data"),
+    }
+    if gated:
+        p["gate"] = P()
+    return p
+
+
+def mlp(p, cfg: ArchConfig, rt: Runtime, x, *, gated=False):
+    h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) * (x @ p["w_up"].astype(x.dtype))
+    h = rt.shard(h, "batch", None, "model")
+    # reduce-scatter into the sequence-parallel domain (Megatron SP)
+    y = tp.out_proj_rs(h, p["w_down"], rt)
+    if gated:
+        y = jnp.tanh(p["gate"].astype(jnp.float32)).astype(y.dtype) * y
+    return rt.shard(y, "batch", "seq", None)

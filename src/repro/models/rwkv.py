@@ -1,0 +1,254 @@
+"""RWKV6 ("Finch") block: data-dependent per-channel decay linear attention.
+
+Time-mix uses the exact WKV6 recurrence, evaluated as a chunk-rematerialized
+sequential scan (outer scan over chunks with jax.checkpoint, inner scan over
+steps) — numerically exact in f32 with no exp(+L) blow-ups, O(1)-in-depth
+compile via lax.scan, and O(chunk) backward memory. Decode is the one-step
+recurrence. Channel-mix is the token-shifted squared-ReLU FFN.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import common, tp
+from repro.models.config import ArchConfig, Runtime
+
+
+def init_rwkv_time(key, cfg: ArchConfig):
+    d = cfg.d_model
+    H = d // 64
+    lora = cfg.rwkv_lora
+    dt = cfg.pdtype()
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": common.init_norm(d, dt, cfg.norm),
+        "mu": common.normal_init(ks[0], (5, d), dt, scale=0.2),  # r,k,v,g,w mixes
+        "w_r": common.normal_init(ks[1], (d, d), dt),
+        "w_k": common.normal_init(ks[2], (d, d), dt),
+        "w_v": common.normal_init(ks[3], (d, d), dt),
+        "w_g": common.normal_init(ks[4], (d, d), dt),
+        "w0": jnp.full((d,), -0.7, dt),
+        "w1": common.normal_init(ks[5], (d, lora), dt),
+        "w2": common.normal_init(ks[6], (lora, d), dt),
+        "u": common.normal_init(ks[7], (H, 64), dt, scale=0.5),
+        "ln_x": {"scale": jnp.ones((d,), dt)},
+        "w_out": common.normal_init(jax.random.fold_in(key, 9), (d, d), dt,
+                                    scale=0.02 / max(1, cfg.n_layers) ** 0.5),
+    }
+
+
+def rwkv_time_spec(cfg: ArchConfig):
+    return {
+        "norm": common.norm_spec(cfg.norm),
+        "mu": P(None, None),
+        "w_r": P("data", "model"),
+        "w_k": P("data", "model"),
+        "w_v": P("data", "model"),
+        "w_g": P("data", "model"),
+        "w0": P(None), "w1": P("data", None), "w2": P(None, None),
+        "u": P(None, None),
+        "ln_x": {"scale": P(None)},
+        "w_out": P("model", "data"),
+    }
+
+
+def init_rwkv_channel(key, cfg: ArchConfig):
+    d, ff = cfg.d_model, cfg.d_ff
+    dt = cfg.pdtype()
+    ks = jax.random.split(key, 3)
+    return {
+        "norm": common.init_norm(d, dt, cfg.norm),
+        "mu": common.normal_init(ks[0], (2, d), dt, scale=0.2),  # k, r mixes
+        "w_k": common.normal_init(ks[1], (d, ff), dt),
+        "w_v": common.normal_init(ks[2], (ff, d), dt,
+                                  scale=0.02 / max(1, cfg.n_layers) ** 0.5),
+        "w_r": common.normal_init(jax.random.fold_in(key, 3), (d, d), dt),
+    }
+
+
+def rwkv_channel_spec(cfg: ArchConfig):
+    return {
+        "norm": common.norm_spec(cfg.norm),
+        "mu": P(None, None),
+        "w_k": P("data", "model"),
+        "w_v": P("model", "data"),
+        "w_r": P("data", None),
+    }
+
+
+def _token_shift(x, x_prev_tok=None):
+    """x: (B,S,d) -> x shifted right by one; first slot from x_prev_tok."""
+    if x.shape[1] == 1 and x_prev_tok is not None:
+        return x_prev_tok[:, None, :]
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if x_prev_tok is not None:
+        shifted = shifted.at[:, 0].set(x_prev_tok)
+    return shifted
+
+
+def _time_mix_inputs(p, cfg: ArchConfig, x, x_prev_tok=None):
+    B, S, d = x.shape
+    H, hd = d // 64, 64
+    xp = _token_shift(x, x_prev_tok)
+    mu = p["mu"].astype(x.dtype)
+    mix = [x + mu[i] * (xp - x) for i in range(5)]
+    r = (mix[0] @ p["w_r"].astype(x.dtype)).reshape(B, S, H, hd)
+    k = (mix[1] @ p["w_k"].astype(x.dtype)).reshape(B, S, H, hd)
+    v = (mix[2] @ p["w_v"].astype(x.dtype)).reshape(B, S, H, hd)
+    g = mix[3] @ p["w_g"].astype(x.dtype)
+    ww = p["w0"].astype(jnp.float32) + jnp.tanh(
+        mix[4].astype(jnp.float32) @ p["w1"].astype(jnp.float32)
+    ) @ p["w2"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(ww)).reshape(B, S, H, hd)        # per-channel decay
+    # r/k/v stay in the activation dtype (bf16 on TPU) — the chunked WKV
+    # einsums accumulate in f32; only the decay chain needs f32 precision.
+    return r, k, v, g, w
+
+
+def _wkv_step(S, rkvw, u):
+    """S: (B,H,K,V); r,k,v,w: (B,H,hd). Exact RWKV6 recurrence."""
+    r, k, v, w = [a.astype(jnp.float32) for a in rkvw]
+    kv = k[..., :, None] * v[..., None, :]                # (B,H,K,V)
+    out = jnp.einsum("bhk,bhkv->bhv", r, S + u[None, :, :, None] * kv)
+    S_new = w[..., :, None] * S + kv
+    return S_new, out
+
+
+def _wkv_chunk_parallel(S0, rc, kc, vc, wc, u):
+    """Matrix-form WKV6 over one chunk (MXU-friendly, no per-step scan).
+
+    rc/kc/vc/wc: (B, c, H, K) f32. Decay exponents are clamped to
+    [-5, 0] per step so exp(-L) stays inside f32 range for c*5 < 88;
+    a per-step decay below e^-5 is numerically-forgotten state anyway.
+    Returns (S_new, y (B, c, H, V)).
+    """
+    B, c, H, K = rc.shape
+    f32 = jnp.float32
+    la = jnp.clip(jnp.log(jnp.maximum(wc, 1e-38)), -5.0, 0.0)  # (B,c,H,K) f32
+    L = jnp.cumsum(la, axis=1)                                 # inclusive
+    L_prev = L - la                                            # exclusive
+    r_t = rc.astype(f32) * jnp.exp(L_prev)                     # <= |rc|
+    k_s = kc.astype(f32) * jnp.exp(-L)                         # bounded by clamp
+    A = jnp.einsum("bthk,bshk->btsh", r_t, k_s,
+                   preferred_element_type=f32)                 # (B,t,s,H)
+    mask = jnp.tril(jnp.ones((c, c), bool), k=-1)              # strict s<t
+    A = jnp.where(mask[None, :, :, None], A, 0.0)
+    diag = jnp.einsum("bthk,hk->bth", (rc * kc).astype(f32), u)
+    vf = vc.astype(f32)
+    y = (jnp.einsum("btsh,bshv->bthv", A, vf,
+                    preferred_element_type=f32)
+         + jnp.einsum("bthk,bhkv->bthv", r_t, S0,
+                      preferred_element_type=f32)
+         + diag[..., None] * vf)
+    decay_to_end = jnp.exp(L[:, -1:] - L)                      # <= 1
+    S_new = (S0 * jnp.exp(L[:, -1])[..., None]
+             + jnp.einsum("bshk,bshv->bhkv", kc.astype(f32) * decay_to_end,
+                          vf, preferred_element_type=f32))
+    return S_new, y
+
+
+def rwkv_time_mix(p, cfg: ArchConfig, rt: Runtime, x, state=None,
+                  x_prev_tok=None):
+    """Full-sequence WKV6. x: (B,S,d). Returns (y, (S_state, last_x)).
+
+    rt.rwkv_mode selects the evaluation strategy:
+      'chunk' (default): matrix-form chunks — state hits HBM once per chunk,
+          intra-chunk work runs on the MXU;
+      'scan': exact sequential recurrence (naive baseline; kept for §Perf
+          comparison and as the numerics oracle under clamp-free decay).
+    """
+    B, S, d = x.shape
+    H, hd = d // 64, 64
+    r, k, v, g, w = _time_mix_inputs(p, cfg, x, x_prev_tok)
+    u = p["u"].astype(jnp.float32)
+
+    cl = min(rt.rwkv_chunk, S)
+    assert S % cl == 0, f"seq {S} must divide rwkv_chunk {cl}"
+    nc = S // cl
+
+    def to_chunks(a):  # (B,S,H,hd) -> (nc,B,cl,H,hd)
+        return a.reshape(B, nc, cl, H, hd).swapaxes(0, 1)
+
+    seq = tuple(map(to_chunks, (r, k, v, w)))
+
+    if rt.rwkv_mode == "chunk":
+        def chunk_body(Sst, chunk):
+            rc, kc, vc, wc = chunk
+            S_new, y = _wkv_chunk_parallel(Sst, rc, kc, vc, wc, u)
+            return S_new, y.swapaxes(0, 1)                 # (cl,B,H,hd)
+    else:
+        def chunk_body(Sst, chunk):
+            rc, kc, vc, wc = chunk
+
+            def step(Si, t):
+                return _wkv_step(Si, (rc[:, t], kc[:, t], vc[:, t],
+                                      wc[:, t]), u)
+
+            Sst, outs = jax.lax.scan(step, Sst, jnp.arange(cl))
+            return Sst, outs                               # (cl,B,H,hd)
+
+    body = jax.checkpoint(chunk_body) if rt.remat else chunk_body
+    S0 = state if state is not None else jnp.zeros((B, H, hd, hd), jnp.float32)
+    S_fin, outs = jax.lax.scan(body, S0, seq)              # (nc,cl,B,H,hd)
+    y = outs.swapaxes(1, 2).swapaxes(0, 1).reshape(B, S, H, hd)
+
+    # per-head group norm, then gate and project
+    y = common.rms_norm(y, jnp.ones((hd,), jnp.float32)).reshape(B, S, d)
+    y = y * p["ln_x"]["scale"].astype(jnp.float32)
+    y = tp.out_proj_rs(y.astype(x.dtype) * jax.nn.silu(g), p["w_out"], rt)
+    return rt.shard(y, "batch", "seq", None), (S_fin, x[:, -1])
+
+
+def rwkv_channel_mix(p, cfg: ArchConfig, rt: Runtime, x, x_prev_tok=None):
+    xp = _token_shift(x, x_prev_tok)
+    mu = p["mu"].astype(x.dtype)
+    xk = x + mu[0] * (xp - x)
+    xr = x + mu[1] * (xp - x)
+    kk = jnp.square(jax.nn.relu(xk @ p["w_k"].astype(x.dtype)))
+    kk = rt.shard(kk, "batch", None, "model")
+    vv = tp.out_proj_rs(kk, p["w_v"], rt)
+    r = jax.nn.sigmoid(xr @ p["w_r"].astype(x.dtype))
+    return rt.shard(r * vv, "batch", "seq", None), x[:, -1]
+
+
+# --------------------------------------------------------------------------
+# Decode
+# --------------------------------------------------------------------------
+
+def init_rwkv_cache(cfg: ArchConfig, batch: int):
+    d = cfg.d_model
+    H, hd = d // 64, 64
+    return {
+        "S": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "x_tm": jnp.zeros((batch, d), cfg.adtype()),
+        "x_cm": jnp.zeros((batch, d), cfg.adtype()),
+    }
+
+
+def rwkv_cache_spec(rt: Runtime):
+    return {"S": rt.pspec("batch", None, None, None),
+            "x_tm": rt.pspec("batch", None),
+            "x_cm": rt.pspec("batch", None)}
+
+
+def rwkv_decode(p_time, p_chan, cfg: ArchConfig, rt: Runtime, x_tok, cache,
+                norm_fn):
+    """One token through time-mix + channel-mix with their pre-norms."""
+    h = norm_fn(x_tok, p_time["norm"])
+    B, _, d = x_tok.shape
+    H, hd = d // 64, 64
+    r, k, v, g, w = _time_mix_inputs(p_time, cfg, h, cache["x_tm"])
+    u = p_time["u"].astype(jnp.float32)
+    S_new, out = _wkv_step(cache["S"],
+                           (r[:, 0], k[:, 0], v[:, 0], w[:, 0]), u)
+    y = common.rms_norm(out[:, None], jnp.ones((hd,), jnp.float32))
+    y = y.reshape(B, 1, d) * p_time["ln_x"]["scale"].astype(jnp.float32)
+    y = (y.astype(x_tok.dtype) * jax.nn.silu(g)) @ p_time["w_out"].astype(x_tok.dtype)
+    x1 = x_tok + y
+    h2 = norm_fn(x1, p_chan["norm"])
+    y2, _ = rwkv_channel_mix(p_chan, cfg, rt, h2, cache["x_cm"])
+    x2 = x1 + y2
+    new_cache = {"S": S_new, "x_tm": h[:, -1], "x_cm": h2[:, -1]}
+    return x2, new_cache

@@ -1,0 +1,187 @@
+"""Mamba2 block (SSD — structured state-space duality), chunked scan form.
+
+Training/prefill uses the chunked SSD algorithm: within a chunk of length c
+the contribution is a masked quadratic form (MXU-friendly einsums); across
+chunks a sequential `lax.scan` carries the (B, H, P, N) state. All decay
+factors are exp(non-positive) so the computation is overflow-free. Decode is
+the exact one-step recurrence with a depthwise-conv ring buffer.
+
+Single KV-group (G=1) variant; head dim P = cfg.ssm_head_dim, state N =
+cfg.ssm_state, inner width = ssm_expand * d_model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import common, tp
+from repro.models.config import ArchConfig, Runtime
+
+
+def init_mamba(key, cfg: ArchConfig):
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    K = cfg.ssm_conv
+    dt = cfg.pdtype()
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": common.init_norm(d, dt, cfg.norm),
+        "w_xz": common.normal_init(ks[0], (d, 2 * di), dt),
+        "w_bc": common.normal_init(ks[1], (d, 2 * N), dt),
+        "w_dt": common.normal_init(ks[2], (d, H), dt),
+        "conv_x": common.normal_init(ks[3], (K, di), dt, scale=0.1),
+        "conv_b": common.normal_init(ks[4], (K, N), dt, scale=0.1),
+        "conv_c": common.normal_init(ks[5], (K, N), dt, scale=0.1),
+        "A_log": jnp.zeros((H,), dt),            # A = -exp(A_log) in (-inf, 0)
+        "D": jnp.ones((H,), dt),
+        "dt_bias": jnp.full((H,), -2.0, dt),     # softplus(-2) ~ 0.13
+        "norm_g": common.init_norm(di, dt, "rms"),
+        "w_out": common.normal_init(ks[6], (di, d), dt,
+                                    scale=0.02 / max(1, cfg.n_layers) ** 0.5),
+    }
+
+
+def mamba_spec(cfg: ArchConfig):
+    return {
+        "norm": common.norm_spec(cfg.norm),
+        "w_xz": P("data", "model"),
+        "w_bc": P("data", None),
+        "w_dt": P("data", None),
+        "conv_x": P(None, "model"),
+        "conv_b": P(None, None),
+        "conv_c": P(None, None),
+        "A_log": P(None),
+        "D": P(None),
+        "dt_bias": P(None),
+        "norm_g": {"scale": P("model")},
+        "w_out": P("model", "data"),
+    }
+
+
+def _causal_conv(u, w):
+    """Depthwise causal conv. u: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    pads = [jnp.pad(u, ((0, 0), (K - 1 - i, 0), (0, 0)))[:, : u.shape[1]] if i < K - 1
+            else u for i in range(K)]
+    acc = sum(pads[i] * w[i].astype(u.dtype) for i in range(K))
+    return jax.nn.silu(acc)
+
+
+def _project(p, cfg: ArchConfig, x):
+    di, N, H, Pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    xz = x @ p["w_xz"].astype(x.dtype)
+    xs, z = jnp.split(xz, 2, axis=-1)                     # (B,S,di) each
+    bc = x @ p["w_bc"].astype(x.dtype)
+    b, c = jnp.split(bc, 2, axis=-1)                      # (B,S,N)
+    dt_raw = x @ p["w_dt"].astype(x.dtype)                # (B,S,H)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    return xs, z, b, c, dt
+
+
+def _ssd_chunk(h, inputs, *, H, Pd, N):
+    """One SSD chunk. h: (B,H,P,N) f32 carry.
+
+    inputs: xs (B,c,H,P) f32, b/cm (B,c,N) f32, dt (B,c,H) f32, la (B,c,H) f32
+    (la = log decay per step, <= 0). Returns (h', y (B,c,H,P) f32).
+    """
+    xs, b, cm, dt, la = inputs
+    L = jnp.cumsum(la, axis=1)                            # (B,c,H) <= 0, decr.
+    tot = L[:, -1]                                        # (B,H)
+    # state contribution: y1[t] = C_t . (exp(L_t) * h)
+    y1 = jnp.einsum("bcn,bch,bhpn->bchp", cm, jnp.exp(L), h)
+    # intra-chunk: decay(t,s) = exp(L_t - L_s) for s <= t  (<= 1, safe)
+    dec = jnp.exp(L[:, :, None, :] - L[:, None, :, :])    # (B,t,s,H)
+    mask = jnp.tril(jnp.ones((L.shape[1], L.shape[1]), bool))
+    dec = jnp.where(mask[None, :, :, None], dec, 0.0)
+    y2 = jnp.einsum("btn,bsn,btsh,bsh,bshp->bthp", cm, b, dec, dt, xs)
+    # new state: h' = exp(tot) h + sum_s exp(tot - L_s) dt_s B_s x_s
+    carry_dec = jnp.exp(tot[:, None, :] - L)              # (B,c,H) <= 1
+    h_new = jnp.exp(tot)[:, :, None, None] * h + jnp.einsum(
+        "bsn,bsh,bsh,bshp->bhpn", b, carry_dec, dt, xs)
+    return h_new, y1 + y2
+
+
+def mamba(p, cfg: ArchConfig, rt: Runtime, x):
+    """Full-sequence Mamba2 mixer. x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    di, N, H, Pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    xs, z, b, c, dt = _project(p, cfg, x)
+    xs = _causal_conv(xs, p["conv_x"])
+    b = _causal_conv(b, p["conv_b"])
+    c = _causal_conv(c, p["conv_c"])
+    xs = rt.shard(xs, "batch", None, "model")
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # (H,)
+    la = dt * A[None, None, :]                            # (B,S,H) log-decay
+    xs4 = xs.reshape(B, S, H, Pd).astype(jnp.float32)
+    bf, cf = b.astype(jnp.float32), c.astype(jnp.float32)
+
+    cl = min(rt.ssm_chunk, S)
+    assert S % cl == 0, f"seq {S} must divide ssm_chunk {cl}"
+    nc = S // cl
+
+    def to_chunks(a):
+        return a.reshape(B, nc, cl, *a.shape[2:]).swapaxes(0, 1)
+
+    seq = (to_chunks(xs4), to_chunks(bf), to_chunks(cf), to_chunks(dt),
+           to_chunks(la))
+
+    def body(h, chunk_in):
+        return _ssd_chunk(h, chunk_in, H=H, Pd=Pd, N=N)
+
+    body_fn = jax.checkpoint(body) if rt.remat else body
+    h0 = jnp.zeros((B, H, Pd, N), jnp.float32)
+    _, ys = jax.lax.scan(body_fn, h0, seq)
+    y = ys.swapaxes(0, 1).reshape(B, S, H, Pd)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xs4
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = common.rms_norm(y * jax.nn.silu(z), p["norm_g"]["scale"])
+    out = tp.out_proj_rs(y, p["w_out"], rt)
+    return rt.shard(out, "batch", "seq", None)
+
+
+# --------------------------------------------------------------------------
+# Decode
+# --------------------------------------------------------------------------
+
+def init_mamba_cache(cfg: ArchConfig, batch: int):
+    di, N, H, Pd, K = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                       cfg.ssm_head_dim, cfg.ssm_conv)
+    return {
+        "h": jnp.zeros((batch, H, Pd, N), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, di + 2 * N), cfg.adtype()),
+    }
+
+
+def mamba_cache_spec(rt: Runtime):
+    return {"h": rt.pspec("batch", None, None, None),
+            "conv": rt.pspec("batch", None, None)}
+
+
+def mamba_decode(p, cfg: ArchConfig, rt: Runtime, x_tok, cache):
+    """One-step recurrence. x_tok: (B, 1, d)."""
+    B = x_tok.shape[0]
+    di, N, H, Pd, K = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                       cfg.ssm_head_dim, cfg.ssm_conv)
+    xs, z, b, c, dt = _project(p, cfg, x_tok)
+    u = jnp.concatenate([xs, b, c], axis=-1)[:, 0]        # (B, di+2N)
+    hist = jnp.concatenate([cache["conv"], u[:, None]], axis=1)  # (B,K,di+2N)
+    w = jnp.concatenate([p["conv_x"], p["conv_b"], p["conv_c"]], axis=-1)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32),
+                                      w.astype(jnp.float32)))
+    xs1, b1, c1 = jnp.split(conv_out, [di, di + N], axis=-1)
+    new_conv = hist[:, 1:].astype(cache["conv"].dtype)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt1 = dt[:, 0]                                        # (B,H)
+    a = jnp.exp(dt1 * A[None, :])                         # (B,H)
+    xh = xs1.reshape(B, H, Pd)
+    h = cache["h"] * a[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt1, b1, xh)
+    y = jnp.einsum("bn,bhpn->bhp", c1, h)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, 1, di).astype(x_tok.dtype)
+    y = common.rms_norm(y * jax.nn.silu(z), p["norm_g"]["scale"])
+    out = y @ p["w_out"].astype(x_tok.dtype)
+    return rt.shard(out, "batch", None, None), {"h": h, "conv": new_conv}

@@ -1,0 +1,78 @@
+"""Explicit tensor-parallel output projection with sequence-parallel
+reduce-scatter (Megatron SP).
+
+GSPMD on the host pipeline lowers `psum -> reshard(seq)` as
+all-reduce + dynamic-slice; the production pattern is a single
+reduce-scatter. We emit it explicitly with shard_map so the dry-run HLO
+carries the real collective schedule:
+
+    h (B, S, ff/model) @ w (ff/model, d/data)  ->  y (B, S/model, d)
+
+i.e. each model-rank computes its partial product and `psum_scatter`s it
+along the sequence axis. Falls back to a plain matmul (+ GSPMD psum) when
+there is no model axis, sequence parallelism is off, or S is indivisible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import Runtime
+
+
+def gather_seq(y, rt: Runtime):
+    """Explicit bf16 all-gather of a (B, S/model, d) seq-sharded activation
+    to full-S replicated. GSPMD left to its own devices hoists this gather
+    above the norm's f32->bf16 convert, doubling the bytes; doing it in
+    shard_map pins both dtype and placement. Transpose (backward) is the
+    matching psum_scatter."""
+    mesh = rt.mesh
+    B, S, d = y.shape
+    usable = (
+        mesh is not None and rt.seq_shard and not rt.dp_only
+        and "model" in rt.axis_names
+        and mesh.shape["model"] > 1 and S % mesh.shape["model"] == 0
+    )
+    if not usable:
+        return rt.shard(y, "batch", None, None)
+    batch_axes = rt.batch_axes or ()
+    in_spec = P(batch_axes if batch_axes else None, "model", None)
+    out_spec = P(batch_axes if batch_axes else None, None, None)
+
+    def f(y_l):
+        return jax.lax.all_gather(y_l, "model", axis=1, tiled=True)
+
+    return jax.shard_map(f, mesh=mesh, in_specs=(in_spec,),
+                         out_specs=out_spec, check_vma=False)(y)
+
+
+def out_proj_rs(h, w, rt: Runtime, *, w_spec=P("model", "data")):
+    """h: (B, S, ff) with ff sharded over 'model'; w: (ff, d) sharded w_spec.
+    Returns (B, S, d) sharded over 'seq'=model on S."""
+    mesh = rt.mesh
+    B, S, ff = h.shape
+    usable = (
+        mesh is not None and rt.seq_shard and not rt.dp_only
+        and "model" in rt.axis_names
+        and mesh.shape["model"] > 1 and S % mesh.shape["model"] == 0
+        and ff % mesh.shape["model"] == 0
+    )
+    if not usable:
+        y = h @ w.astype(h.dtype)
+        return rt.shard(y, "batch", "seq", None)
+
+    batch_axes = rt.batch_axes or ()
+    h_spec = P(batch_axes if batch_axes else None, None, "model")
+    o_spec = P(batch_axes if batch_axes else None, "model", None)
+
+    def f(h_l, w_l):
+        if "data" in tuple(w_spec):
+            axis = tuple(w_spec).index("data")
+            w_l = jax.lax.all_gather(w_l, "data", axis=axis, tiled=True)
+        y = h_l @ w_l.astype(h_l.dtype)                    # partial over model
+        return jax.lax.psum_scatter(y, "model", scatter_dimension=1,
+                                    tiled=True)
+
+    return jax.shard_map(f, mesh=mesh, in_specs=(h_spec, w_spec),
+                         out_specs=o_spec)(h, w)

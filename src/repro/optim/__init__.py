@@ -1,0 +1,5 @@
+from repro.optim.adamw import adamw_init, adamw_update, sgd_init, sgd_update
+from repro.optim.schedule import cosine_schedule, linear_warmup_cosine
+
+__all__ = ["adamw_init", "adamw_update", "sgd_init", "sgd_update",
+           "cosine_schedule", "linear_warmup_cosine"]

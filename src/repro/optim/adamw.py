@@ -1,0 +1,60 @@
+"""AdamW + SGD in plain JAX (f32 moments over any-dtype params)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, opt_state, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.0, grad_clip=1.0):
+    step = opt_state["step"] + 1
+    if grad_clip:
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree_util.tree_leaves(grads)))
+        scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+        grads = jax.tree_util.tree_map(
+            lambda g: (g.astype(jnp.float32) * scale), grads)
+    else:
+        grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = jnp.zeros((), jnp.float32)
+
+    mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                opt_state["mu"], grads)
+    nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                opt_state["nu"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+    return new_params, {"mu": mu, "nu": nu, "step": step}, gnorm
+
+
+def sgd_init(params):
+    return {"mom": jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32)}
+
+
+def sgd_update(params, grads, opt_state, *, lr, momentum=0.9):
+    mom = jax.tree_util.tree_map(
+        lambda m, g: momentum * m + g.astype(jnp.float32),
+        opt_state["mom"], grads)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+        params, mom)
+    return new_params, {"mom": mom, "step": opt_state["step"] + 1}

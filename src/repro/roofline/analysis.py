@@ -1,0 +1,139 @@
+"""Three-term roofline model from a compiled dry-run artifact.
+
+    compute   = HLO_FLOPs / (chips * peak_FLOPs)
+    memory    = HLO_bytes / (chips * HBM_bw)
+    collective= collective_link_bytes / (chips * link_bw)
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+cost_analysis() FLOPs/bytes on the host backend are whole-program (all
+partitions) for the replicated program: we detect per-device vs global by
+dividing by chips. Collective bytes come from the HLO parser (per-device link
+bytes already).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.roofline import hlo as hlo_mod
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link (ICI)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float          # whole-program FLOPs (all chips)
+    hlo_bytes: float          # whole-program bytes accessed
+    coll_bytes: float         # per-chip link bytes
+    coll_detail: Dict[str, float]
+    model_flops: float = 0.0  # 6*N*D (or 6*N_active*D)
+    peak_memory: float = 0.0  # per-device bytes (from memory_analysis)
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "hlo_flops": self.hlo_flops,
+            "useful_ratio": self.useful_flops_ratio,
+            "peak_mem_gb": self.peak_memory / 1e9,
+            "coll_detail": self.coll_detail,
+        }
+
+
+def from_compiled(compiled, *, arch: str, shape: str, mesh_desc: str,
+                  chips: int, model_flops: float = 0.0,
+                  hlo_text: Optional[str] = None,
+                  bf16_target: bool = True) -> Roofline:
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    # xla's cost_analysis() counts while bodies ONCE; our HLO walker applies
+    # loop trip counts (scan over layers/chunks), so it is the source of truth.
+    # The parsed numbers are per-partition (post-SPMD shapes); scale to the
+    # whole program by multiplying with the chip count.
+    flops_pp, bytes_pp = hlo_mod.program_costs(text, f32_deflate=bf16_target)
+    flops = flops_pp * chips
+    byts = bytes_pp * chips
+    stats = hlo_mod.collective_bytes(text, f32_deflate=bf16_target)
+    mem = compiled.memory_analysis()
+    peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes +
+            mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_desc, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts,
+        coll_bytes=stats.total_link_bytes, coll_detail=stats.raw_bytes,
+        model_flops=model_flops, peak_memory=peak)
+
+
+# --------------------------------------------------------------------------
+# MODEL_FLOPS = 6 * N_active * D  (D = tokens processed in the step)
+# --------------------------------------------------------------------------
+
+def active_param_count(cfg) -> int:
+    """Active params per token (MoE counts topk experts, not all)."""
+    d, ff, L, V = cfg.d_model, cfg.d_ff, cfg.n_layers, cfg.vocab
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    attn = d * hq * hd + 2 * d * hkv * hd + hq * hd * d
+
+    if cfg.family in ("dense",):
+        per_layer = attn + 3 * d * ff
+        total = L * per_layer
+    elif cfg.family == "moe":
+        expert = 3 * d * ff
+        per_layer = attn + cfg.topk_experts * expert + d * cfg.n_experts
+        total = L * per_layer
+    elif cfg.family == "hybrid":
+        di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        mamba = d * 2 * di + d * (2 * N + H) + di * d
+        n_attn = sum((i + 1) % cfg.attn_every == 0 for i in range(L))
+        total = L * mamba + n_attn * (attn + 3 * d * ff)
+    elif cfg.family == "ssm":
+        total = L * (4 * d * d + d * d) + L * (2 * d * ff + d * d)
+    elif cfg.family == "vlm":
+        n_cross = L // cfg.cross_attn_every
+        n_self = L - n_cross
+        total = n_self * (attn + 3 * d * ff) + n_cross * (attn + 3 * d * ff)
+    elif cfg.family == "audio":
+        enc = cfg.n_enc_layers * (attn + 3 * d * ff)
+        dec = L * (2 * attn + 3 * d * ff)
+        total = enc + dec
+    else:
+        total = 0
+    total += 2 * V * d  # embed + unembed
+    return int(total)
+
+
+def model_flops(cfg, *, tokens: int, training: bool) -> float:
+    mult = 6.0 if training else 2.0
+    return mult * active_param_count(cfg) * tokens

@@ -1,0 +1,394 @@
+"""Collective-byte extraction from post-SPMD optimized HLO text.
+
+`cost_analysis()` has no collective traffic, so we parse `compiled.as_text()`:
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction contributes its (per-device, post-partition)
+output bytes times an op-specific ring factor. Instructions living inside
+`while` bodies (lax.scan over layers / chunks) are multiplied by the loop trip
+count, recovered from the `compare(..., constant(N))` in the loop condition —
+nested loops compose multiplicatively.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# bytes moved over links per device ~= factor * local output bytes
+_RING_FACTOR = {
+    "all-gather": 1.0,          # receives (N-1)/N of the gathered result
+    "all-reduce": 2.0,          # reduce-scatter + all-gather phases
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(?)([a-z0-9]+)\[([\d,]*)\][^=]*?\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_TUPLE_COLL_RE = re.compile(
+    r"=\s*\((.*?)\)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COMPUTATION_RE = re.compile(r"^(?:ENTRY\s+)?%?([^\s(]+)\s*\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_TRIP_RE = re.compile(r'known_trip_count\\?":\{\\?"n\\?":\\?"(\d+)')
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> its instruction lines.
+
+    Headers are non-indented `[ENTRY] %name (args...) -> result {` lines;
+    args may contain nested tuple parens, so we key on indentation + brace.
+    """
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.rstrip()
+        if (line and not line[0].isspace() and stripped.endswith("{")
+                and "(" in line):
+            m = _COMPUTATION_RE.match(line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is not None:
+            if stripped == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _while_trips(line: str, comps: Dict[str, List[str]], cond: str) -> int:
+    """Trip count: prefer XLA's known_trip_count, fall back to the condition
+    computation's compare constant."""
+    m = _TRIP_RE.search(line)
+    if m:
+        return int(m.group(1))
+    return _loop_bound(comps.get(cond, []))
+
+
+def _loop_bound(cond_lines: List[str]) -> int:
+    """Trip count from a scan-style loop condition (max constant compared)."""
+    consts = [int(m.group(1)) for line in cond_lines
+              for m in _CONST_RE.finditer(line)]
+    return max(consts) if consts else 1
+
+
+def _collectives_in(lines: List[str], f32_deflate: bool = False):
+    out = []
+    for line in lines:
+        # XLA:CPU's float-normalization legalizes bf16 arrays/collectives to
+        # f32 (and promotes reduction apply fns). The TPU target keeps them
+        # bf16, so with f32_deflate every f32 collective is counted at half
+        # width. Genuinely-f32 traffic (optimizer moments) is loop-free and
+        # small by comparison; the approximation is documented in DESIGN.md.
+        m = _COLL_RE.search(line)
+        if m:
+            dtype, dims, op = m.groups()
+            w = 0.5 if (f32_deflate and dtype == "f32") else 1.0
+            if "_promoted" in line and not f32_deflate:
+                w *= 0.5
+            out.append((op, w * _shape_bytes(dtype, dims)))
+            continue
+        m = _TUPLE_COLL_RE.search(line)
+        if m:
+            shapes, op = m.groups()
+            b = 0.0
+            for d, sh in _SHAPE_RE.findall(shapes):
+                w = 0.5 if (f32_deflate and d == "f32") else 1.0
+                b += w * _shape_bytes(d, sh)
+            # tuple shape of -start ops lists (operand, result[, ...]); halve
+            out.append((op, b / 2))
+    return out
+
+
+def _whiles_in(lines: List[str]):
+    return [(line, m.group(1), m.group(2)) for line in lines
+            for m in _WHILE_RE.finditer(line)]
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?.*?\)?)\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CALLS_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "copy", "copy-start", "copy-done", "after-all", "partition-id",
+    "replica-id", "iota", "while", "conditional", "call",
+}
+
+
+def _parse_shape(text: str):
+    """'f32[16,32]{1,0}' or tuple -> total bytes and first shape dims."""
+    total = 0.0
+    first_dims = None
+    for m in _SHAPE_RE.finditer(text):
+        dtype, dims = m.groups()
+        total += _shape_bytes(dtype, dims)
+        if first_dims is None:
+            first_dims = (dtype, dims)
+    return total, first_dims
+
+
+def _dims_list(dims: str):
+    return [int(d) for d in dims.split(",") if d]
+
+
+def program_costs(hlo: str, f32_deflate: bool = False):
+    """Loop-amplified (flops, bytes) estimate for the whole program.
+
+    flops: 2 * prod(out) * prod(contracted lhs dims) for every dot,
+    including dots inside fusion bodies, times enclosing while trip counts.
+    bytes: every materialized instruction output counted twice (write+read),
+    fusion internals excluded (only the fusion's output materializes).
+    """
+    comps = split_computations(hlo)
+    if not comps:
+        return 0.0, 0.0
+
+    # symbol tables: per computation, instruction name -> shape-text
+    symtab: Dict[str, Dict[str, str]] = {}
+    parsed: Dict[str, list] = {}
+    for cname, lines in comps.items():
+        tab: Dict[str, str] = {}
+        plist = []
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, shape_text, op = m.groups()
+            tab[name] = shape_text
+            plist.append((name, shape_text, op, line))
+        symtab[cname] = tab
+        parsed[cname] = plist
+
+    entry = next((n for n in comps if "main" in n), None) or \
+        max(comps, key=lambda n: len(comps[n]))
+
+    flops_memo: Dict[str, float] = {}
+    bytes_memo: Dict[str, float] = {}
+
+    def flops_of(cname: str, depth=0) -> float:
+        if cname in flops_memo:
+            return flops_memo[cname]
+        if cname not in parsed or depth > 16:
+            return 0.0
+        flops_memo[cname] = 0.0  # cycle guard
+        total = 0.0
+        tab = symtab[cname]
+        for name, shape_text, op, line in parsed[cname]:
+            if op == "dot":
+                out_b, out_first = _parse_shape(shape_text)
+                if out_first is None:
+                    continue
+                out_elems = 1
+                for d in _dims_list(out_first[1]):
+                    out_elems *= d
+                cm = _CONTRACT_RE.search(line)
+                contracted = 1
+                if cm:
+                    ops = _OPERAND_RE.findall(line.split("dot(")[1])
+                    lhs = ops[0] if ops else None
+                    lhs_shape = tab.get(lhs)
+                    if lhs_shape:
+                        _, first = _parse_shape(lhs_shape)
+                        dims = _dims_list(first[1]) if first else []
+                        for c in _dims_list(cm.group(1)):
+                            if c < len(dims):
+                                contracted *= dims[c]
+                total += 2.0 * out_elems * contracted
+            elif op == "while":
+                bm = _WHILE_RE.search(line)
+                if bm:
+                    trips = _while_trips(line, comps, bm.group(1))
+                    total += trips * flops_of(bm.group(2), depth + 1)
+            elif op in ("fusion", "call", "conditional"):
+                for sub in _CALLS_RE.findall(line):
+                    total += flops_of(sub, depth + 1)
+                bb = _BRANCHES_RE.search(line)
+                if bb:
+                    subs = _OPERAND_RE.findall(bb.group(1))
+                    if subs:
+                        total += max(flops_of(s, depth + 1) for s in subs)
+        flops_memo[cname] = total
+        return total
+
+    def _dus_update_bytes(cname: str, line: str):
+        """kLoop fusions rooted at dynamic-update-slice write only the update
+        slice (the big buffer is aliased in place by scan stacking) — count
+        the update operand, not the full output, or a 256-trip scan inflates
+        its output buffer 256x."""
+        for sub in _CALLS_RE.findall(line):
+            for fline in comps.get(sub, []):
+                if " dynamic-update-slice(" in fline:
+                    ops = _OPERAND_RE.findall(
+                        fline.split("dynamic-update-slice(")[1])
+                    if len(ops) >= 2:
+                        upd = symtab.get(sub, {}).get(ops[1])
+                        if upd:
+                            return _parse_shape(upd)
+        return None
+
+    def bytes_of(cname: str, depth=0) -> float:
+        if cname in bytes_memo:
+            return bytes_memo[cname]
+        if cname not in parsed or depth > 16:
+            return 0.0
+        bytes_memo[cname] = 0.0
+        total = 0.0
+        tab = symtab[cname]
+        for name, shape_text, op, line in parsed[cname]:
+            if op == "while":
+                bm = _WHILE_RE.search(line)
+                if bm:
+                    trips = _while_trips(line, comps, bm.group(1))
+                    total += trips * bytes_of(bm.group(2), depth + 1)
+                continue
+            if op == "conditional":
+                bb = _BRANCHES_RE.search(line)
+                if bb:
+                    subs = _OPERAND_RE.findall(bb.group(1))
+                    if subs:
+                        total += max(bytes_of(s, depth + 1) for s in subs)
+            if op in _SKIP_BYTES_OPS:
+                continue
+            parsed_shape = None
+            if op == "fusion":
+                parsed_shape = _dus_update_bytes(cname, line)
+            elif op == "dynamic-update-slice":
+                ops = _OPERAND_RE.findall(line.split("(", 1)[1])
+                if len(ops) >= 2 and ops[1] in tab:
+                    parsed_shape = _parse_shape(tab[ops[1]])
+            if parsed_shape is None:
+                parsed_shape = _parse_shape(shape_text)
+            out_b, first = parsed_shape
+            if f32_deflate and first and first[0] == "f32":
+                out_b *= 0.5              # bf16 on the TPU target
+            total += 2.0 * out_b          # write + one read
+        bytes_memo[cname] = total
+        return total
+
+    return flops_of(entry), bytes_of(entry)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_op_bytes: Dict[str, float]
+
+    @property
+    def total_link_bytes(self) -> float:
+        return sum(_RING_FACTOR.get(op, 1.0) * b
+                   for op, b in self.per_op_bytes.items())
+
+    @property
+    def raw_bytes(self) -> Dict[str, float]:
+        return dict(self.per_op_bytes)
+
+
+def collective_bytes(hlo: str, entry: str = None,
+                     f32_deflate: bool = False) -> CollectiveStats:
+    comps = split_computations(hlo)
+    if not comps:
+        return CollectiveStats({})
+    if entry is None:
+        entry = next((n for n in comps if "main" in n), None) or \
+            max(comps, key=lambda n: len(comps[n]))
+
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def walk(name: str, depth=0) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or depth > 12:
+            return {}
+        lines = comps[name]
+        acc: Dict[str, float] = defaultdict(float)
+        for op, b in _collectives_in(lines, f32_deflate):
+            acc[op] += b
+        for line_, cond, body in _whiles_in(lines):
+            trips = _while_trips(line_, comps, cond)
+            inner = walk(body, depth + 1)
+            for op, b in inner.items():
+                acc[op] += trips * b
+        memo[name] = dict(acc)
+        return memo[name]
+
+    # also include called computations (fusion/conditional) reachable from
+    # entry via calls; approximate by walking every computation referenced
+    # as body/branch from the entry chain — scan loops dominate in practice.
+    stats = walk(entry)
+    return CollectiveStats(dict(stats))
+
+
+def attention_score_bytes(hlo: str, seq: int, f32_deflate: bool = False):
+    """Traffic attributable to materialized attention-score tensors:
+    instruction outputs whose trailing two dims look like (q-block, S) with
+    S == the model sequence length. This is the traffic a fused
+    flash-attention kernel keeps in VMEM (kernel-adjusted roofline)."""
+    comps = split_computations(hlo)
+    if not comps:
+        return 0.0
+    parsed = {}
+    for cname, lines in comps.items():
+        plist = []
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if m:
+                plist.append(m.groups() + (line,))
+        parsed[cname] = plist
+    entry = next((n for n in comps if "main" in n), None) or \
+        max(comps, key=lambda n: len(comps[n]))
+    memo = {}
+
+    def walk(cname, depth=0):
+        if cname in memo:
+            return memo[cname]
+        if cname not in parsed or depth > 16:
+            return 0.0
+        memo[cname] = 0.0
+        total = 0.0
+        for name, shape_text, op, line in parsed[cname]:
+            if op == "while":
+                bm = _WHILE_RE.search(line)
+                if bm:
+                    trips = _while_trips(line, comps, bm.group(1))
+                    total += trips * walk(bm.group(2), depth + 1)
+                continue
+            if op in _SKIP_BYTES_OPS:
+                continue
+            b, first = _parse_shape(shape_text)
+            if first is None:
+                continue
+            dims = _dims_list(first[1])
+            if len(dims) >= 4 and dims[-1] == seq and dims[-2] >= 256:
+                if f32_deflate and first[0] == "f32":
+                    b *= 0.5
+                total += 2.0 * b
+        memo[cname] = total
+        return total
+
+    return walk(entry)

@@ -1,0 +1,3 @@
+from repro.split import model, protocol
+
+__all__ = ["model", "protocol"]

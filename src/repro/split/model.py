@@ -1,0 +1,61 @@
+"""SplitModel: backbone forward with the cut-layer compression boundary."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ArchConfig, Runtime
+from repro.split import protocol
+
+
+def forward(params, cfg: ArchConfig, rt: Runtime, batch, *, key=None):
+    """Split-aware forward: bottom layers -> compress/transfer -> top layers.
+
+    Returns (logits, aux) where aux folds the MoE balance loss and the L1
+    cut-activation penalty.
+    """
+    if cfg.split is None or cfg.split.cut_layer <= 0:
+        return transformer.forward(params, cfg, rt, batch, key=key)
+
+    cut = cfg.split.cut_layer
+    assert 0 < cut < cfg.n_layers, f"cut_layer {cut} out of range"
+    extras = transformer.make_extras(params, cfg, rt, batch)
+    x = transformer.embed(params, cfg, rt, batch["tokens"])
+    x, aux1 = transformer.apply_layers(params, cfg, rt, x, extras, 0, cut)
+    x, pen = protocol.cut_boundary(x, cfg, rt, key)
+    x, aux2 = transformer.apply_layers(params, cfg, rt, x, extras, cut,
+                                       cfg.n_layers)
+    logits = transformer.lm_head(params, cfg, rt, x)
+    return logits, aux1 + aux2 + pen
+
+
+def decode_step(params, cfg: ArchConfig, rt: Runtime, token, cache):
+    """Split-aware decode: the forward cut payload crosses the pod boundary
+    every generated token (inference-phase communication — the paper's main
+    target). Inference uses deterministic TopK (RandTopk is training-only)."""
+    if cfg.split is None or cfg.split.cut_layer <= 0:
+        return transformer.decode_step(params, cfg, rt, token, cache)
+
+    import dataclasses as _dc
+
+    cut = cfg.split.cut_layer
+    x = transformer.embed(params, cfg, rt, token)
+    x, nc1 = transformer.decode_layers(params, cfg, rt, x, cache, 0, cut)
+    rt_inf = _dc.replace(rt, training=False)
+    x, _ = protocol.cut_boundary(x, cfg, rt_inf, None)
+    x, nc2 = transformer.decode_layers(params, cfg, rt, x, cache, cut,
+                                       cfg.n_layers)
+    logits = transformer.lm_head(params, cfg, rt, x)
+    new_cache = dict(cache)
+    for k in nc1:
+        if k in nc2:
+            new_cache[k] = jax.tree_util.tree_map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), nc1[k], nc2[k])
+        else:
+            new_cache[k] = nc1[k]
+    for k in nc2:
+        if k not in nc1:
+            new_cache[k] = nc2[k]
+    new_cache["pos"] = cache["pos"] + 1
+    return logits, new_cache

@@ -1,0 +1,98 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step + one decode step on CPU; asserts output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.data.pipeline import make_lm_batch
+from repro.launch.steps import make_serve_step, make_train_step
+from repro.models import transformer
+from repro.models.config import Runtime
+from repro.optim import adamw_init
+
+RT = Runtime(mesh=None, training=True)
+RT_INF = Runtime(mesh=None, training=False)
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_smoke_forward_train_decode(arch):
+    cfg = configs.get(arch, smoke=True)
+    assert cfg.n_layers <= 4 and cfg.d_model <= 512
+    if cfg.n_experts:
+        assert cfg.n_experts <= 4
+    params = transformer.init_model(jax.random.key(0), cfg)
+    batch = make_lm_batch(jax.random.key(1), cfg, 2, 32)
+
+    logits, aux = transformer.forward(params, cfg, RT, batch)
+    assert logits.shape == (2, 32, cfg.padded_vocab)
+    assert not bool(jnp.isnan(logits).any())
+
+    step = jax.jit(make_train_step(cfg, RT))
+    p2, o2, m = step(params, adamw_init(params), batch, jax.random.key(2))
+    assert np.isfinite(float(m["loss"]))
+    assert float(m["grad_norm"]) > 0
+
+    extras = {}
+    if cfg.family == "vlm":
+        extras["patches"] = batch["patches"]
+    if cfg.family == "audio":
+        extras["enc_out"] = transformer.run_encoder(params, cfg, RT_INF,
+                                                    batch["frames"])
+    cache = transformer.init_cache(params, cfg, RT_INF, 2, 64, extras)
+    serve = jax.jit(make_serve_step(cfg, RT_INF))
+    tok = jnp.zeros((2, 1), jnp.int32)
+    for _ in range(3):
+        tok, cache = serve(params, cache, tok)
+    assert tok.shape == (2, 1)
+    assert int(cache["pos"]) == 3
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact assigned hyperparameters."""
+    cfg = configs.get(arch)
+    expected = {
+        "qwen3_moe_235b_a22b": dict(n_layers=94, d_model=4096, n_heads=64,
+                                    n_kv_heads=4, d_ff=1536, vocab=151936,
+                                    n_experts=128, topk_experts=8),
+        "zamba2_7b": dict(n_layers=81, d_model=3584, n_heads=32,
+                          n_kv_heads=32, d_ff=14336, vocab=32000,
+                          ssm_state=64),
+        "granite_3_8b": dict(n_layers=40, d_model=4096, n_heads=32,
+                             n_kv_heads=8, d_ff=12800, vocab=49155),
+        "yi_6b": dict(n_layers=32, d_model=4096, n_heads=32, n_kv_heads=4,
+                      d_ff=11008, vocab=64000),
+        "granite_moe_1b_a400m": dict(n_layers=24, d_model=1024, n_heads=16,
+                                     n_kv_heads=8, d_ff=512, vocab=49155,
+                                     n_experts=32, topk_experts=8),
+        "rwkv6_1p6b": dict(n_layers=24, d_model=2048, d_ff=7168,
+                           vocab=65536),
+        "llama_3_2_vision_90b": dict(n_layers=100, d_model=8192, n_heads=64,
+                                     n_kv_heads=8, d_ff=28672, vocab=128256),
+        "qwen3_8b": dict(n_layers=36, d_model=4096, n_heads=32,
+                         n_kv_heads=8, d_ff=12288, vocab=151936,
+                         qk_norm=True),
+        "whisper_tiny": dict(n_layers=4, d_model=384, n_heads=6,
+                             n_kv_heads=6, d_ff=1536, vocab=51865,
+                             encdec=True),
+        "phi3_mini_3p8b": dict(n_layers=32, d_model=3072, n_heads=32,
+                               n_kv_heads=32, d_ff=8192, vocab=32064),
+    }[arch]
+    for key, val in expected.items():
+        assert getattr(cfg, key) == val, (arch, key, getattr(cfg, key), val)
+
+
+def test_param_spec_tree_matches_params():
+    """Sharding spec trees must be congruent with the param trees."""
+    for arch in configs.ARCHS:
+        cfg = configs.get(arch, smoke=True)
+        params = jax.eval_shape(
+            lambda: transformer.init_model(jax.random.key(0), cfg))
+        spec = transformer.param_spec(cfg)
+        ps = jax.tree_util.tree_structure(params)
+        ss = jax.tree_util.tree_structure(
+            spec, is_leaf=lambda s: isinstance(
+                s, jax.sharding.PartitionSpec))
+        assert ps == ss, f"{arch}: {ps} != {ss}"

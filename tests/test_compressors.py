@@ -1,0 +1,127 @@
+"""Compressor semantics: forward views, backward rules, size accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compressors as C
+
+
+def test_factory():
+    c = C.make_compressor("randtopk:k=5,alpha=0.2")
+    assert isinstance(c, C.RandTopK) and c.k == 5 and c.alpha == 0.2
+    assert isinstance(C.make_compressor("quant", bits=2), C.Quantization)
+    assert isinstance(C.make_compressor(None), C.Compressor)
+    with pytest.raises(ValueError):
+        C.make_compressor("nope")
+
+
+def test_topk_forward_backward_support():
+    """Gradient must be masked with the forward support (paper Table 2)."""
+    x = jax.random.normal(jax.random.key(0), (4, 32))
+    c = C.TopK(k=6)
+
+    def f(x):
+        y, _ = c.forward(x)
+        return jnp.sum(y ** 2)
+
+    g = jax.grad(f)(x)
+    mask = np.asarray(c.forward(x)[0] != 0)
+    assert (np.asarray(g)[~mask] == 0).all()
+    assert (np.abs(np.asarray(g)[mask]) > 0).all()
+
+
+def test_randtopk_inference_is_deterministic_topk():
+    x = jax.random.normal(jax.random.key(0), (4, 32))
+    r = C.RandTopK(k=6, alpha=0.3)
+    t = C.TopK(k=6)
+    yr, _ = r.forward(x, training=False)
+    yt, _ = t.forward(x)
+    np.testing.assert_array_equal(np.asarray(yr), np.asarray(yt))
+
+
+def test_randtopk_training_requires_key():
+    x = jnp.ones((2, 8))
+    with pytest.raises(ValueError):
+        C.RandTopK(k=2).forward(x, training=True)
+
+
+def test_quantization_error_bound():
+    x = jax.random.normal(jax.random.key(1), (8, 64))
+    for bits in (2, 4, 8):
+        c = C.Quantization(bits=bits)
+        y, _ = c.forward(x)
+        step = (x.max(-1, keepdims=True) - x.min(-1, keepdims=True)) / 2**bits
+        assert float(jnp.abs(y - x).max()) <= float(step.max()) * 0.51
+
+
+def test_quantization_ste_gradient():
+    x = jax.random.normal(jax.random.key(2), (4, 16))
+    c = C.Quantization(bits=4)
+    g = jax.grad(lambda x: jnp.sum(c.forward(x)[0]))(x)
+    np.testing.assert_allclose(np.asarray(g), 1.0)
+
+
+def test_l1_penalty_and_inference_mask():
+    x = jnp.array([[0.5, 1e-9, -2.0, 0.0]])
+    c = C.L1Reg(lam=0.1)
+    y_train, _ = c.forward(x, training=True)
+    np.testing.assert_array_equal(np.asarray(y_train), np.asarray(x))
+    y_inf, aux = c.forward(x, training=False)
+    assert np.asarray(y_inf[0, 1]) == 0.0
+    assert float(c.loss_penalty(x)) > 0
+
+
+def test_table2_sizes():
+    """Compressed sizes must match the paper's Table 2 formulas."""
+    from repro.core import wire
+
+    d, k, bits = 128, 4, 2
+    r = wire.index_bits(d)  # 7
+    row = wire.table2_row("topk", d, k=k)
+    assert row["fwd"] == pytest.approx(k / d * (1 + r / 32))
+    assert row["bwd"] == pytest.approx(k / d)
+    row = wire.table2_row("size_reduction", d, k=k)
+    assert row["fwd"] == row["bwd"] == pytest.approx(k / d)
+    row = wire.table2_row("quant", d, bits=bits)
+    assert row["fwd"] == pytest.approx(bits / 32)
+    assert row["bwd"] == 1.0
+
+
+def test_compressor_fwd_bits_consistent_with_wire():
+    from repro.core import wire
+
+    d = 300
+    c = C.TopK(k=11)
+    assert c.fwd_bits(d) == 11 * (32 + wire.index_bits(d))
+    assert c.bwd_bits(d) == 11 * 32
+
+
+def test_randtopk_quant_combined():
+    """Beyond-paper combined compressor: exact-k support, quantized values,
+    STE gradient on the support only."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    x = jax.random.normal(jax.random.key(0), (4, 64))
+    c = C.make_compressor("randtopk_quant", k=6, alpha=0.1, bits=4)
+    y, aux = c.forward(x, key=jax.random.key(1), training=True)
+    assert (np.asarray((y != 0).sum(-1)) <= 6).all()
+    # inference deterministic, support = top-k
+    y2, _ = c.forward(x, training=False)
+    mask = np.asarray(y2 != 0)
+    from repro.core import selection
+    np.testing.assert_array_equal(mask, np.asarray(selection.topk_mask(x, 6)))
+    # quantization error bounded by the selected-value range / 2^bits
+    sel = np.where(mask, np.asarray(x), np.nan)
+    rng = np.nanmax(sel, -1) - np.nanmin(sel, -1)
+    err = np.abs(np.asarray(y2) - np.asarray(x) * mask)[mask.astype(bool)]
+    assert err.max() <= (rng.max() / 2**4) * 0.51
+    # gradient masked to the support
+    g = jax.grad(lambda x: jnp.sum(
+        c.forward(x, key=jax.random.key(1), training=True)[0]))(x)
+    assert (np.asarray(g)[~np.asarray(
+        c.forward(x, key=jax.random.key(1), training=True)[0] != 0)] == 0).all()
+    # wire accounting smaller than fp32 topk at same k
+    assert c.fwd_bits(64) < C.TopK(k=6).fwd_bits(64)

@@ -1,0 +1,29 @@
+"""The shipped examples must stay runnable (subprocess, single device)."""
+import subprocess
+import sys
+
+import pytest
+
+
+def _run_example(path, timeout=900):
+    r = subprocess.run(
+        [sys.executable, path], capture_output=True, text=True,
+        timeout=timeout,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": "cpu"},
+        cwd="/root/repo")
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_quickstart_example():
+    out = _run_example("examples/quickstart.py")
+    assert "compressed size" in out
+    assert "greedy decode" in out
+
+
+@pytest.mark.slow
+def test_two_party_vfl_example():
+    out = _run_example("examples/two_party_vfl.py")
+    assert "randtopk" in out and "size_reduction" in out

@@ -1,0 +1,111 @@
+"""Launcher integration tests: train driver convergence, serve driver,
+checkpoint resume, and a small-mesh dry-run (subprocess keeps the main
+pytest process single-device)."""
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+def _run(code: str, device_count=8, timeout=900):
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "XLA_FLAGS":
+                 f"--xla_force_host_platform_device_count={device_count}",
+             "JAX_PLATFORMS": "cpu"},
+        cwd="/root/repo")
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    return r.stdout
+
+
+def test_train_driver_loss_decreases(tmp_path):
+    out = _run(f"""
+        from repro.launch.train import main
+        import re, io, contextlib
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            main(["--arch", "yi-6b", "--smoke", "--steps", "40",
+                  "--batch", "8", "--seq", "64", "--lr", "1e-3",
+                  "--split", "randtopk", "--k", "16",
+                  "--ckpt-dir", "{tmp_path}/ck", "--ckpt-every", "20"])
+        text = buf.getvalue()
+        losses = [float(m) for m in
+                  __import__("re").findall(r"loss=([0-9.]+)", text)]
+        assert losses[-1] < losses[0] - 0.01, losses
+        print("LOSSES", losses[0], losses[-1])
+    """, device_count=1)
+    assert "LOSSES" in out
+
+
+def test_train_driver_restores_checkpoint(tmp_path):
+    _run(f"""
+        from repro.launch.train import main
+        main(["--arch", "yi-6b", "--smoke", "--steps", "10", "--batch", "4",
+              "--seq", "32", "--ckpt-dir", "{tmp_path}/ck",
+              "--ckpt-every", "10"])
+        # resume: start==10 -> zero new steps executed, restore path covered
+        import io, contextlib
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            main(["--arch", "yi-6b", "--smoke", "--steps", "12",
+                  "--batch", "4", "--seq", "32",
+                  "--ckpt-dir", "{tmp_path}/ck", "--ckpt-every", "100"])
+        assert "restored step 10" in buf.getvalue()
+        print("RESUME OK")
+    """, device_count=1)
+
+
+def test_serve_driver(capsys):
+    _run("""
+        from repro.launch.serve import main
+        out = main(["--arch", "granite-moe-1b-a400m", "--smoke",
+                    "--batch", "2", "--prompt-len", "4", "--gen", "6",
+                    "--split", "topk", "--k", "8"])
+        assert out.shape == (2, 6)
+        print("SERVE OK")
+    """, device_count=1)
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh_train_and_decode():
+    """The dry-run machinery on an 8-device (2,2,2) pod mesh: lower+compile
+    must succeed and the roofline terms must be positive/finite."""
+    _run("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax
+        from repro.launch import specs as S
+        from repro.launch.steps import make_serve_step, make_train_step
+        from repro.models.config import Runtime, SplitConfig
+        from repro.roofline import analysis
+        import repro.configs as configs
+
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        cfg = configs.get("qwen3-8b", smoke=True).with_(
+            split=SplitConfig(cut_layer=1, compressor="randtopk", k=16))
+        shape = S.ShapeSpec("t", "train", 64, 8)
+        rt = Runtime(mesh=mesh, training=True)
+        with mesh:
+            args, in_sh = S.train_specs(cfg, shape, rt)
+            step = make_train_step(cfg, rt, internal_key=True)
+            compiled = jax.jit(step, in_shardings=in_sh,
+                               donate_argnums=(0, 1)).lower(*args).compile()
+        roof = analysis.from_compiled(compiled, arch="qwen3-8b", shape="t",
+                                      mesh_desc="2x2x2", chips=8,
+                                      model_flops=1.0, bf16_target=False)
+        assert roof.t_compute > 0 and roof.t_memory > 0
+        assert roof.coll_bytes > 0  # pod permute + TP collectives present
+        # decode path
+        shape_d = S.ShapeSpec("d", "decode", 64, 8)
+        rt_d = Runtime(mesh=mesh, training=False, seq_shard=False)
+        with mesh:
+            args, in_sh = S.decode_specs(cfg, shape_d, rt_d)
+            sstep = make_serve_step(cfg, rt_d)
+            jax.jit(sstep, in_shardings=in_sh,
+                    donate_argnums=(1,)).lower(*args).compile()
+        print("DRYRUN OK")
+    """)

@@ -1,0 +1,54 @@
+"""Byte-exact wire format round-trips + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import wire
+
+
+@given(st.integers(2, 2048), st.integers(1, 16), st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_sparse_roundtrip(d, k, seed):
+    k = min(k, d)
+    rng = np.random.RandomState(seed)
+    vals = rng.randn(k).astype(np.float32)
+    idx = rng.choice(d, size=k, replace=False)
+    buf = wire.encode_sparse(vals, idx, d)
+    v2, i2 = wire.decode_sparse(buf, k, d)
+    np.testing.assert_array_equal(v2, vals)
+    np.testing.assert_array_equal(i2, idx)
+    # byte count matches Table 2 within rounding
+    expect_bits = k * 32 + k * wire.index_bits(d)
+    assert len(buf) == 4 * k + (k * wire.index_bits(d) + 7) // 8
+    assert abs(len(buf) * 8 - expect_bits) < 8
+
+
+def test_sparse_to_dense():
+    vals = np.array([[1.0, -2.0]])
+    idx = np.array([[3, 0]])
+    dense = wire.sparse_to_dense(vals, idx, 5)
+    np.testing.assert_array_equal(dense, [[-2.0, 0, 0, 1.0, 0]])
+
+
+@given(st.integers(2, 64), st.integers(1, 8), st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_quant_roundtrip(d, bits, seed):
+    rng = np.random.RandomState(seed)
+    n = 3
+    x = rng.randn(n, d).astype(np.float32)
+    lo = x.min(-1)
+    step = (x.max(-1) - lo) / 2**bits
+    step[step <= 0] = 1.0
+    codes = np.clip(np.floor((x - lo[:, None]) / step[:, None]), 0,
+                    2**bits - 1)
+    buf = wire.encode_quant(codes, lo, step, bits)
+    deq = wire.decode_quant(buf, n, d, bits)
+    assert np.abs(deq - x).max() <= step.max() * 0.51
+
+
+def test_bytes_per_step():
+    b_train = wire.bytes_per_step("topk", 128, 10, k=4, training=True)
+    b_inf = wire.bytes_per_step("topk", 128, 10, k=4, training=False)
+    assert b_train > b_inf > 0
+    ident = wire.bytes_per_step("identity", 128, 10, training=False)
+    assert ident == 128 * 4 * 10
