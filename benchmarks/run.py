@@ -28,7 +28,7 @@ def main() -> None:
                             combined_compression, error_feedback, fig2_toy,
                             fig4_convergence, fig5_distribution,
                             roofline_report, table2_sizes, table3_accuracy,
-                            table7_dbpedia_geometry)
+                            table7_dbpedia_geometry, wire_packing)
 
     sections = {
         "table2": table2_sizes.main,
@@ -42,6 +42,7 @@ def main() -> None:
         "table7": table7_dbpedia_geometry.main,
         "privacy": appendixB_privacy.main,
         "roofline": roofline_report.main,
+        "wire": wire_packing.main,
     }
     chosen = (args.only.split(",") if args.only else list(sections))
 

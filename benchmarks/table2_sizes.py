@@ -1,39 +1,34 @@
 """Paper Table 2 — compressed sizes: analytic formulas vs byte-exact wire
-encodings (core/wire.py), plus kernel-vs-oracle timing microbenches."""
+encodings of the packed payloads (core/wire.encode_payload on
+core/compressors.encode output), plus kernel-vs-oracle timing microbenches.
+
+Every method is measured the same way: encode the probe activation to its
+`Payload`, serialize it, and compare the socket bytes against the Table-2
+analytic row — one codec, one source of truth."""
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import selection, wire
+from repro.core import compressors as C, wire
 from repro.kernels.randtopk import kernel as tk_kernel
 
 
 def main(emit=print):
     d, n_inst = 128, 64
-    x = np.random.RandomState(0).randn(n_inst, d).astype(np.float32)
+    x = jax.numpy.asarray(
+        np.random.RandomState(0).randn(n_inst, d).astype(np.float32))
     ok_all = True
     for method, kw in [("size_reduction", dict(k=3)), ("topk", dict(k=3)),
                        ("randtopk", dict(k=3)), ("quant", dict(bits=4)),
+                       ("randtopk_quant", dict(k=3, bits=8)),
                        ("identity", {})]:
         row = wire.table2_row(method, d, **kw)
-        # byte-exact measurement of the forward payload
-        if method in ("topk", "randtopk"):
-            k = kw["k"]
-            vals, idx = selection.topk_values_indices(jnp.asarray(x), k)
-            buf = wire.encode_sparse(np.asarray(vals), np.asarray(idx), d)
-            measured = len(buf) / (n_inst * d * 4)
-        elif method == "size_reduction":
-            measured = kw["k"] * 4 * n_inst / (n_inst * d * 4)
-        elif method == "quant":
-            bits = kw["bits"]
-            codes = np.zeros((n_inst, d))
-            buf = wire.encode_quant(codes, np.zeros(n_inst),
-                                    np.ones(n_inst), bits)
-            measured = len(buf) / (n_inst * d * 4)
-        else:
-            measured = 1.0
+        comp = C.make_compressor(method, **kw)
+        # byte-exact measurement of the forward payload via the codec
+        payload = jax.tree.map(np.asarray,
+                               comp.encode(x, key=jax.random.key(0)))
+        measured = wire.payload_nbytes(payload) / (n_inst * d * 4)
         analytic = row["fwd"]
         if method == "quant":
             # Table 2 writes 2^b/N and ignores the per-instance (lo, step)
@@ -45,6 +40,12 @@ def main(emit=print):
         emit(f"table2,{method},fwd_analytic={row['fwd']:.4f},"
              f"fwd_measured={measured:.4f},bwd={row['bwd']:.4f},"
              f"match={close}")
+        # the codec's own per-instance analytic bits must agree byte-for-byte
+        codec_bits = wire.payload_bits_per_instance(payload.meta) * n_inst
+        slop = 8 * 2  # two bit-packed streams round up to whole bytes
+        codec_ok = abs(wire.payload_nbytes(payload) * 8 - codec_bits) <= slop
+        ok_all &= codec_ok
+        emit(f"table2,{method},codec_bits_match={codec_ok}")
     emit(f"table2_check,analytic_matches_measured,{ok_all}")
 
     # kernel microbench (interpret mode timing is indicative only)

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verification — the command the driver runs after every PR.
+#
+#   scripts/ci.sh            # full tier-1 suite
+#   scripts/ci.sh -m "not slow"   # quick pass (skip subprocess dry-runs)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -1,0 +1,21 @@
+"""Version-compat aliases for jax APIs that moved between releases.
+
+The repo targets current jax, but must also run on 0.4.x containers where
+`shard_map` still lives under `jax.experimental` (with `check_rep` instead
+of `check_vma`) and `jax.make_mesh` takes no `axis_types` (see
+`launch.mesh.make_mesh` for the latter).
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:  # jax < 0.5
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+        if check_vma is not None:
+            kw["check_rep"] = check_vma
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)

@@ -3,13 +3,17 @@ from repro.core.compressors import (
     L1Reg,
     Quantization,
     RandTopK,
+    RandTopKQuant,
     SizeReduction,
     TopK,
     make_compressor,
+    payload_to_dense,
 )
+from repro.core.payload import Payload, PayloadMeta
 from repro.core import selection, wire
 
 __all__ = [
-    "Compressor", "L1Reg", "Quantization", "RandTopK", "SizeReduction",
-    "TopK", "make_compressor", "selection", "wire",
+    "Compressor", "L1Reg", "Payload", "PayloadMeta", "Quantization",
+    "RandTopK", "RandTopKQuant", "SizeReduction", "TopK", "make_compressor",
+    "payload_to_dense", "selection", "wire",
 ]

@@ -1,26 +1,37 @@
 """Cut-layer compressors for split learning (paper Sections 3-4).
 
-Each compressor is a frozen config object with a functional interface:
+Each compressor is a frozen config object implementing the packed-payload
+codec that defines everything that crosses the cut layer:
 
-    y, aux = comp.forward(x, key=key, training=True)
+    payload = comp.encode(x, key=key, training=True)   # wire-dtype pytree
+    y       = comp.decode(payload, shape=x.shape)      # dense far-side view
+    y, aux  = comp.forward(x, key=key, training=True)  # decode(encode(x))
 
-`x` is the cut-layer activation `(..., d)`; `y` is the label-owner-side view
-(dense, with zeros in dropped slots, or dequantized values); `aux` carries
-whatever the backward pass and the wire-format need (mask / indices / scale).
+`x` is the cut-layer activation `(..., d)`. `encode` produces a
+`core.payload.Payload` — float32 values / uint8 codes / uint16 indices /
+float32 range headers, exactly what a two-party socket (core.wire) or the
+pod-boundary ppermute (split.protocol) moves. `decode` is
+compressor-independent: any party holding a payload can reconstruct the
+dense view from the payload alone. `forward` is kept as the composition
+`decode(encode(x))` for backward compatibility; `aux` carries the support
+mask where one exists.
 
 Backward semantics follow the paper exactly:
   * size-reduction / top-k / randtopk: the gradient is masked with the SAME
     support that was used in the forward pass (the label owner sends only the
     k gradient values; indices are already known to the feature owner).
-    Realized naturally by autodiff through `x * stop_gradient(mask)`.
+    Realized by gather-from-support in encode + scatter in decode (whose
+    adjoints are scatter/gather), or explicitly by `split.protocol`'s
+    payload-typed backward rules.
   * quantization: forward quantize-dequantize; the backward gradient is sent
     uncompressed, and the chain through the quantizer is the straight-through
-    estimator (identity), via jax.custom_vjp.
+    estimator (identity), via the `_ste` custom_vjp.
   * L1: identity at training time + a `loss_penalty(x)` term; at inference the
     support is the empirically-nonzero set (|x| > tol after training shrinks
     activations toward zero).
 
-Compression ratios are reported by `fwd_bits`/`bwd_bits` (Table 2).
+Compression ratios are reported by `fwd_bits`/`bwd_bits` (Table 2), which
+tests cross-check against the measured `wire.encode_payload` byte counts.
 """
 from __future__ import annotations
 
@@ -32,12 +43,62 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import selection
+from repro.core.payload import Payload, PayloadMeta
 
 FLOAT_BITS = 32  # N in the paper
+MAX_INDEX = 2 ** 16  # uint16 wire indices
 
 
 def _index_bits(d: int) -> int:
     return max(1, math.ceil(math.log2(d)))
+
+
+@jax.custom_vjp
+def _ste(x, y):
+    """Value `y`, gradient identity to `x` (straight-through estimator)."""
+    return y
+
+
+def _ste_fwd(x, y):
+    return y, None
+
+
+def _ste_bwd(_, g):
+    return g, jnp.zeros_like(g)
+
+
+_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+def payload_to_dense(p: Payload, shape=None, dtype=None):
+    """Dense view (..., d) of any payload — the label-owner-side Decode.
+
+    Compressor-independent: dispatches on `p.meta.kind` only, so the far
+    side of the wire never needs the compressor object itself.
+    """
+    dtype = dtype or jnp.float32
+    m = p.meta
+    if m.kind == "dense":
+        return p.values.astype(dtype)
+    if m.kind == "slice":
+        pad = [(0, 0)] * (p.values.ndim - 1) + [(0, m.d - m.k)]
+        return jnp.pad(p.values.astype(dtype), pad)
+    if m.kind == "sparse":
+        out = jnp.zeros(p.values.shape[:-1] + (m.d,), dtype)
+        return jnp.put_along_axis(out, p.indices.astype(jnp.int32),
+                                  p.values.astype(dtype), axis=-1,
+                                  inplace=False)
+    if m.kind == "quant":
+        lo, step = p.header[..., :1], p.header[..., 1:]
+        deq = lo + (p.values.astype(jnp.float32) + 0.5) * step
+        return deq.astype(dtype)
+    if m.kind == "sparse_quant":
+        lo, step = p.header[..., :1], p.header[..., 1:]
+        vals = lo + (p.values.astype(jnp.float32) + 0.5) * step
+        out = jnp.zeros(vals.shape[:-1] + (m.d,), dtype)
+        return jnp.put_along_axis(out, p.indices.astype(jnp.int32),
+                                  vals.astype(dtype), axis=-1, inplace=False)
+    raise ValueError(m.kind)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,9 +106,25 @@ class Compressor:
     """Base: identity (vanilla split learning, 'No compression')."""
 
     name: str = "identity"
+    backend: Optional[str] = None   # selection backend: None->auto, xla, pallas
+
+    wire_kind = "dense"             # payload kind this compressor emits
+
+    # -- codec ---------------------------------------------------------------
+    def encode(self, x, *, key=None, training=False) -> Payload:
+        return Payload(meta=PayloadMeta("dense", d=x.shape[-1]),
+                       values=x.astype(jnp.float32))
+
+    def decode(self, p: Payload, shape=None, dtype=None):
+        return payload_to_dense(p, shape=shape, dtype=dtype)
 
     def forward(self, x, *, key=None, training=False):
-        return x, {}
+        p = self.encode(x, key=key, training=training)
+        y = self.decode(p, shape=x.shape, dtype=x.dtype)
+        return y, self._aux(p, x, training)
+
+    def _aux(self, p: Payload, x, training) -> dict:
+        return {}
 
     def loss_penalty(self, x):
         return jnp.zeros((), dtype=jnp.float32)
@@ -72,12 +149,17 @@ class SizeReduction(Compressor):
     k: int = 8
     name: str = "size_reduction"
 
-    def forward(self, x, *, key=None, training=False):
+    wire_kind = "slice"
+
+    def encode(self, x, *, key=None, training=False):
         d = x.shape[-1]
-        mask = jnp.arange(d) < self.k
-        mask = jnp.broadcast_to(mask, x.shape)
-        y = x * jax.lax.stop_gradient(mask.astype(x.dtype))
-        return y, {"mask": mask}
+        k = min(self.k, d)
+        return Payload(meta=PayloadMeta("slice", d=d, k=k),
+                       values=x[..., :k].astype(jnp.float32))
+
+    def _aux(self, p, x, training):
+        mask = jnp.arange(p.meta.d) < p.meta.k
+        return {"mask": jnp.broadcast_to(mask, x.shape)}
 
     def fwd_bits(self, d):
         return self.k * FLOAT_BITS
@@ -93,13 +175,31 @@ class TopK(Compressor):
     k: int = 8
     name: str = "topk"
 
-    def _mask(self, x, key, training):
-        return selection.topk_mask(x, self.k)
+    wire_kind = "sparse"
 
-    def forward(self, x, *, key=None, training=False):
+    def _mask(self, x, key, training):
+        return selection.topk_mask(x, self.k, backend=self.backend)
+
+    def _support(self, x, key, training):
+        """uint16 indices of the selected support (stop-gradient)."""
+        d = x.shape[-1]
+        assert d <= MAX_INDEX, "uint16 wire indices need d <= 65536"
+        k = min(self.k, d)
         mask = self._mask(x, key, training)
-        y = x * jax.lax.stop_gradient(mask.astype(x.dtype))
-        return y, {"mask": mask}
+        score = jnp.where(mask, jnp.abs(x.astype(jnp.float32)), -1.0)
+        _, idx = jax.lax.top_k(score, k)
+        return jax.lax.stop_gradient(idx), mask
+
+    def encode(self, x, *, key=None, training=False):
+        d = x.shape[-1]
+        idx, _ = self._support(x, key, training)
+        vals = jnp.take_along_axis(x, idx, axis=-1).astype(jnp.float32)
+        return Payload(meta=PayloadMeta("sparse", d=d, k=idx.shape[-1]),
+                       values=vals, indices=idx.astype(jnp.uint16))
+
+    def _aux(self, p, x, training):
+        return {"mask": selection.mask_from_indices(
+            p.indices.astype(jnp.int32), p.meta.d)}
 
     def fwd_bits(self, d):
         return self.k * (FLOAT_BITS + _index_bits(d))
@@ -121,52 +221,50 @@ class RandTopK(TopK):
 
     def _mask(self, x, key, training):
         if not training:
-            return selection.topk_mask(x, self.k)
+            return selection.topk_mask(x, self.k, backend=self.backend)
         if key is None:
             raise ValueError("RandTopK.forward(training=True) needs a PRNG key")
-        return selection.randtopk_mask(x, self.k, self.alpha, key)
+        return selection.randtopk_mask(x, self.k, self.alpha, key,
+                                       backend=self.backend)
 
 
-def _quant_fwd(x, bits: int):
-    """Uniform quantization (Eq. 2) with per-instance [min, max] range."""
-    xf = x.astype(jnp.float32)
+def _quant_encode(x, bits: int):
+    """Uniform quantization (Eq. 2) with per-instance [min, max] range.
+
+    Returns (codes int32, header f32 (..., 2)); both stop-gradient.
+    """
+    xf = jax.lax.stop_gradient(x.astype(jnp.float32))
     lo = jnp.min(xf, axis=-1, keepdims=True)
     hi = jnp.max(xf, axis=-1, keepdims=True)
     n_bins = 2 ** bits
     step = (hi - lo) / n_bins
     step = jnp.where(step <= 0, 1.0, step)
     code = jnp.clip(jnp.floor((xf - lo) / step), 0, n_bins - 1)
-    deq = lo + (code + 0.5) * step
-    return deq.astype(x.dtype), code.astype(jnp.int32), lo, step
-
-
-@jax.custom_vjp
-def _quant_ste(x, bits: int):
-    return _quant_fwd(x, bits)[0]
-
-
-def _quant_ste_fwd(x, bits):
-    return _quant_ste(x, bits), None
-
-
-def _quant_ste_bwd(_, g):
-    return (g, None)
-
-
-_quant_ste.defvjp(_quant_ste_fwd, _quant_ste_bwd)
+    return code.astype(jnp.int32), jnp.concatenate([lo, step], axis=-1)
 
 
 @dataclasses.dataclass(frozen=True)
 class Quantization(Compressor):
     """b-bit uniform quantization of the forward activation; backward is the
-    full-precision gradient (paper applies quantization forward-only)."""
+    full-precision gradient (paper applies quantization forward-only, with a
+    straight-through estimator through the quantizer)."""
 
     bits: int = 4
     name: str = "quant"
 
+    wire_kind = "quant"
+
+    def encode(self, x, *, key=None, training=False):
+        assert self.bits <= 8, "uint8 wire codes need bits <= 8"
+        code, header = _quant_encode(x, self.bits)
+        return Payload(meta=PayloadMeta("quant", d=x.shape[-1],
+                                        bits=self.bits),
+                       values=code.astype(jnp.uint8), header=header)
+
     def forward(self, x, *, key=None, training=False):
-        y = _quant_ste(x, self.bits)
-        return y, {}
+        p = self.encode(x, key=key, training=training)
+        y = self.decode(p, shape=x.shape, dtype=x.dtype)
+        return _ste(x, y), {}
 
     def fwd_bits(self, d):
         # codes + the (lo, step) range floats, amortized over the instance
@@ -186,11 +284,15 @@ class L1Reg(Compressor):
     tol: float = 1e-6
     name: str = "l1"
 
-    def forward(self, x, *, key=None, training=False):
+    def encode(self, x, *, key=None, training=False):
+        vals = x if training else x * (jnp.abs(x) > self.tol).astype(x.dtype)
+        return Payload(meta=PayloadMeta("dense", d=x.shape[-1]),
+                       values=vals.astype(jnp.float32))
+
+    def _aux(self, p, x, training):
         if training:
-            return x, {}
-        mask = jnp.abs(x) > self.tol
-        return x * mask.astype(x.dtype), {"mask": mask}
+            return {}
+        return {"mask": jnp.abs(x) > self.tol}
 
     def loss_penalty(self, x):
         return self.lam * jnp.sum(jnp.abs(x.astype(jnp.float32))) / x.shape[0]
@@ -213,29 +315,45 @@ class RandTopKQuant(RandTopK):
     """Beyond-paper: RandTopk + b-bit quantization of the surviving values
     (the combination the paper's conclusion names as promising future work).
 
-    Wire: k codes of `bits` + k indices + per-instance (lo, step) header;
-    at matched bytes this affords a ~(32+r)/(bits+r) times larger support k.
-    Backward: gradient on the selected support, full precision (masked),
-    STE through the value quantizer.
+    Wire: k codes of `bits` + k uint16 indices + per-instance (lo, step)
+    header; at matched bytes this affords a ~(32+r)/(bits+r) times larger
+    support k. Backward: gradient on the selected support, full precision
+    (masked), STE through the value quantizer.
     """
 
     bits: int = 8
     name: str = "randtopk_quant"
 
-    def forward(self, x, *, key=None, training=False):
-        mask = self._mask(x, key, training)
-        maskf = jax.lax.stop_gradient(mask.astype(x.dtype))
+    wire_kind = "sparse_quant"
+
+    def encode(self, x, *, key=None, training=False):
+        assert self.bits <= 8, "uint8 wire codes need bits <= 8"
+        d = x.shape[-1]
+        idx, _ = self._support(x, key, training)
+        vals = jnp.take_along_axis(x, idx, axis=-1).astype(jnp.float32)
         # quantize using the range of the SELECTED values only (tighter bins)
-        sel = jnp.where(mask, x, jnp.nan)
-        lo = jnp.nanmin(sel.astype(jnp.float32), axis=-1, keepdims=True)
-        hi = jnp.nanmax(sel.astype(jnp.float32), axis=-1, keepdims=True)
+        vals = jax.lax.stop_gradient(vals)
+        lo = jnp.min(vals, axis=-1, keepdims=True)
+        hi = jnp.max(vals, axis=-1, keepdims=True)
         n_bins = 2 ** self.bits
         step = jnp.where(hi > lo, (hi - lo) / n_bins, 1.0)
-        code = jnp.clip(jnp.floor((x.astype(jnp.float32) - lo) / step),
-                        0, n_bins - 1)
-        deq = (lo + (code + 0.5) * step).astype(x.dtype)
-        y = jax.lax.stop_gradient(deq - x) + x        # STE on values
-        return y * maskf, {"mask": mask}
+        code = jnp.clip(jnp.floor((vals - lo) / step), 0, n_bins - 1)
+        return Payload(meta=PayloadMeta("sparse_quant", d=d,
+                                        k=idx.shape[-1], bits=self.bits),
+                       values=code.astype(jnp.uint8),
+                       indices=idx.astype(jnp.uint16),
+                       header=jnp.concatenate([lo, step], axis=-1))
+
+    def _aux(self, p, x, training):
+        return {"mask": selection.mask_from_indices(
+            p.indices.astype(jnp.int32), p.meta.d)}
+
+    def forward(self, x, *, key=None, training=False):
+        p = self.encode(x, key=key, training=training)
+        y = self.decode(p, shape=x.shape, dtype=x.dtype)
+        aux = self._aux(p, x, training)
+        maskf = jax.lax.stop_gradient(aux["mask"].astype(x.dtype))
+        return _ste(x * maskf, y), aux   # STE on values, masked support
 
     def fwd_bits(self, d):
         return self.k * (self.bits + _index_bits(d)) + 2 * FLOAT_BITS
@@ -247,7 +365,7 @@ class RandTopKQuant(RandTopK):
 def make_compressor(spec: Optional[str], **kw) -> Compressor:
     """Factory: 'randtopk:k=8,alpha=0.1' style strings or kwargs."""
     if spec is None or spec == "none" or spec == "identity":
-        return Compressor()
+        return Compressor(**kw)
     if ":" in spec:
         name, args = spec.split(":", 1)
         for item in args.split(","):

@@ -1,0 +1,87 @@
+"""Typed cut-layer payload — the single object that crosses the wire.
+
+A `Payload` is a pytree of device arrays already in their *wire* dtypes:
+float32 values, uint8 quantization codes, uint16 support indices, and a
+per-instance float32 `(lo, step)` range header. It is produced by
+`Compressor.encode`, moved leaf-by-leaf across the pod boundary by
+`split.protocol`, reconstructed to a dense activation by `Compressor.decode`,
+and serialized bit-exactly by `core.wire.encode_payload`. Every byte count
+the repo reports (Table 2 analytic formulas, roofline collective bytes,
+measured socket bytes) is derived from this one object, so the three can be
+cross-checked against each other.
+
+Payload kinds:
+
+  dense        values f32 (..., d)                    identity / L1
+  slice        values f32 (..., k)                    size reduction (first k)
+  sparse       values f32 (..., k) + indices u16      top-k / randtop-k
+  quant        codes  u8  (..., d) + header f32 (..,2)  uniform quantization
+  sparse_quant codes  u8  (..., k) + indices u16
+               + header f32 (..., 2)                  randtopk + quant
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+
+KINDS = ("dense", "slice", "sparse", "quant", "sparse_quant")
+
+#: wire-leaf field names, in transfer order
+WIRE_FIELDS = ("values", "indices", "header")
+
+
+@dataclasses.dataclass(frozen=True)
+class PayloadMeta:
+    """Static (hashable) payload descriptor; rides along as pytree metadata."""
+
+    kind: str                       # one of KINDS
+    d: int                          # dense feature width of the decoded view
+    k: int = 0                      # support size (slice/sparse kinds)
+    bits: int = 0                   # code width (quant kinds)
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown payload kind {self.kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Payload:
+    """Pytree of wire-dtype device arrays + static meta.
+
+    `values` carries f32 values (dense/slice/sparse) or u8 codes (quant
+    kinds); `indices` the u16 support (sparse kinds); `header` the f32
+    per-instance `(lo, step)` quantization range (quant kinds).
+    """
+
+    meta: PayloadMeta
+    values: Any
+    indices: Optional[Any] = None
+    header: Optional[Any] = None
+
+    # -- wire-leaf access ----------------------------------------------------
+    def wire_leaves(self) -> Tuple[Tuple[str, Any], ...]:
+        """(name, array) pairs of the leaves that actually cross the wire."""
+        return tuple((f, getattr(self, f)) for f in WIRE_FIELDS
+                     if getattr(self, f) is not None)
+
+    def with_leaves(self, **leaves) -> "Payload":
+        return dataclasses.replace(self, **leaves)
+
+    def device_nbytes(self) -> int:
+        """Bytes of the device-resident (byte-aligned) representation.
+
+        The bit-packed socket size is `wire.payload_nbytes`; this is the
+        upper bound the TPU fabric actually moves (no sub-byte addressing).
+        """
+        return sum(int(a.size) * a.dtype.itemsize for _, a in
+                   self.wire_leaves())
+
+    @property
+    def batch_shape(self):
+        return self.values.shape[:-1]
+
+
+jax.tree_util.register_dataclass(
+    Payload, data_fields=list(WIRE_FIELDS), meta_fields=["meta"])

@@ -13,20 +13,51 @@ vectorized exactly:
     distribution renormalizes as pools deplete), clipped to the pool sizes;
   * uniform-without-replacement within a pool == Gumbel-top-m on uniform
     weights (exponential race), which is branch-free and layout-friendly.
+
+Backend dispatch: `topk_mask` / `randtopk_mask` accept `backend=`:
+
+  * ``"xla"``    — `jax.lax.top_k`-based reference path (default off-TPU);
+  * ``"pallas"`` — the bisection kernel in `kernels/randtopk` (interpret mode
+    when not running on a TPU, Mosaic when on one), which also emits the
+    Eq. (7) randomized mask in-kernel;
+  * ``"auto"``   — pallas on a TPU runtime, xla elsewhere; the default, and
+    overridable via the REPRO_SELECTION_BACKEND environment variable.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
 
 _NEG_INF = float("-inf")
 
+BACKENDS = ("auto", "xla", "pallas")
 
-def topk_mask(x: jax.Array, k: int) -> jax.Array:
+
+def _resolve_backend(backend):
+    backend = backend or os.environ.get("REPRO_SELECTION_BACKEND", "auto")
+    if backend not in BACKENDS:
+        raise ValueError(f"selection backend {backend!r} not in {BACKENDS}")
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    return backend
+
+
+def _pallas_interpret() -> bool:
+    # interpret-mode on CPU/GPU for validation; Mosaic on a real TPU runtime
+    return jax.default_backend() != "tpu"
+
+
+def topk_mask(x: jax.Array, k: int, *, backend: str = None) -> jax.Array:
     """Boolean mask of the k largest-|x| elements along the last axis."""
     d = x.shape[-1]
     if k >= d:
         return jnp.ones_like(x, dtype=bool)
+    if _resolve_backend(backend) == "pallas":
+        from repro.kernels.randtopk import ops as tk_ops
+
+        return tk_ops.topk_mask(x, k, interpret=_pallas_interpret())
     mag = jnp.abs(x).astype(jnp.float32)
     kth = jax.lax.top_k(mag, k)[0][..., -1:]
     # Break ties deterministically: strictly-greater always in; equal-to-kth
@@ -36,14 +67,6 @@ def topk_mask(x: jax.Array, k: int) -> jax.Array:
     need = k - jnp.sum(gt, axis=-1, keepdims=True)
     eq_rank = jnp.cumsum(eq.astype(jnp.int32), axis=-1)
     return gt | (eq & (eq_rank <= need))
-
-
-def topk_values_indices(x: jax.Array, k: int):
-    """(values, indices) of the top-k |x| elements — the wire payload."""
-    mag = jnp.abs(x).astype(jnp.float32)
-    _, idx = jax.lax.top_k(mag, k)
-    vals = jnp.take_along_axis(x, idx, axis=-1)
-    return vals, idx
 
 
 def mask_from_indices(idx: jax.Array, d: int) -> jax.Array:
@@ -69,7 +92,17 @@ def _select_m_from_pool(scores: jax.Array, pool: jax.Array, m: jax.Array, k: int
     return jnp.where(m > 0, sel, jnp.zeros_like(sel))
 
 
-def randtopk_mask(x: jax.Array, k: int, alpha: float, key: jax.Array) -> jax.Array:
+def binomial_nontop_count(key: jax.Array, alpha: float, k: int, d: int,
+                          batch_shape) -> jax.Array:
+    """m ~ Binomial(k, alpha) per instance, clipped to the pool sizes —
+    the number of non-top-k picks in Eq. (7). Shape (*batch_shape, 1)."""
+    draws = jax.random.bernoulli(key, alpha, tuple(batch_shape) + (k,))
+    m = jnp.sum(draws.astype(jnp.int32), axis=-1, keepdims=True)
+    return jnp.clip(m, 0, min(k, d - k))
+
+
+def randtopk_mask(x: jax.Array, k: int, alpha: float, key: jax.Array,
+                  *, backend: str = None) -> jax.Array:
     """Randomized top-k selection mask, Eq. (7) of the paper.
 
     Each of the k draws (without replacement) picks a top-k element with
@@ -80,14 +113,14 @@ def randtopk_mask(x: jax.Array, k: int, alpha: float, key: jax.Array) -> jax.Arr
     d = x.shape[-1]
     if k >= d:
         return jnp.ones_like(x, dtype=bool)
+    if _resolve_backend(backend) == "pallas":
+        from repro.kernels.randtopk import ops as tk_ops
+
+        return tk_ops.randtopk_mask(x, k, alpha, key,
+                                    interpret=_pallas_interpret())
     kb, kg = jax.random.split(key)
-    is_top = topk_mask(x, k)
-
-    # m ~ Binomial(k, alpha), one per instance, clipped to the non-top pool.
-    draws = jax.random.bernoulli(kb, alpha, x.shape[:-1] + (k,))
-    m = jnp.sum(draws.astype(jnp.int32), axis=-1, keepdims=True)
-    m = jnp.clip(m, 0, min(k, d - k))
-
+    is_top = topk_mask(x, k, backend="xla")
+    m = binomial_nontop_count(kb, alpha, k, d, x.shape[:-1])
     g = jax.random.gumbel(kg, x.shape, dtype=jnp.float32)
     sel_top = _select_m_from_pool(g, is_top, k - m, k)
     sel_non = _select_m_from_pool(g, ~is_top, m, k)

@@ -5,12 +5,22 @@ addressing); this module is the host-side serialization that a real two-party
 deployment puts on the socket, and the source of truth for the compressed-size
 numbers reported in EXPERIMENTS.md. Offset/index encoding uses
 r = ceil(log2 d) bits per index, bit-packed, exactly as the paper assumes.
+
+Serialization is payload-typed: `encode_payload` / `decode_payload` map the
+`core.payload.Payload` pytree (the same object `split.protocol` moves across
+the pod boundary) to/from a bitstream, so the measured socket bytes, the
+device transfer bytes, and the Table-2 analytic formulas are all derived from
+one object and cross-checked in tests. Bit packing is vectorized numpy
+(bit-shift matrix + `np.packbits`), little-endian within the stream —
+byte-identical to the historical per-bit layout.
 """
 from __future__ import annotations
 
 import math
 
 import numpy as np
+
+from repro.core.payload import Payload, PayloadMeta
 
 FLOAT_BITS = 32
 
@@ -20,29 +30,27 @@ def index_bits(d: int) -> int:
 
 
 def _pack_bits(vals: np.ndarray, width: int) -> bytes:
-    """Pack unsigned ints (any shape) into a bitstream, `width` bits each."""
-    vals = vals.astype(np.uint64).ravel()
-    nbits = int(vals.size) * width
-    out = np.zeros((nbits + 7) // 8, dtype=np.uint8)
-    for i, v in enumerate(vals.tolist()):
-        base = i * width
-        for b in range(width):
-            if (v >> b) & 1:
-                out[(base + b) >> 3] |= 1 << ((base + b) & 7)
-    return out.tobytes()
+    """Pack unsigned ints (any shape) into a bitstream, `width` bits each.
+
+    Value i occupies absolute bit positions [i*width, (i+1)*width), least
+    significant bit first; bit j of the stream is bit j%8 of byte j//8.
+    """
+    vals = np.ascontiguousarray(vals).astype(np.uint64).ravel()
+    if vals.size == 0 or width == 0:
+        return b""
+    shifts = np.arange(width, dtype=np.uint64)
+    bits = ((vals[:, None] >> shifts) & np.uint64(1)).astype(np.uint8)
+    return np.packbits(bits.ravel(), bitorder="little").tobytes()
 
 
 def _unpack_bits(buf: bytes, width: int, count: int) -> np.ndarray:
+    if count == 0 or width == 0:
+        return np.zeros(count, dtype=np.uint64)
     arr = np.frombuffer(buf, dtype=np.uint8)
-    out = np.zeros(count, dtype=np.uint64)
-    for i in range(count):
-        base = i * width
-        v = 0
-        for b in range(width):
-            if arr[(base + b) >> 3] & (1 << ((base + b) & 7)):
-                v |= 1 << b
-        out[i] = v
-    return out
+    bits = np.unpackbits(arr, bitorder="little")[: count * width]
+    bits = bits.reshape(count, width).astype(np.uint64)
+    shifts = np.arange(width, dtype=np.uint64)
+    return np.bitwise_or.reduce(bits << shifts, axis=1)
 
 
 def encode_sparse(values: np.ndarray, indices: np.ndarray, d: int) -> bytes:
@@ -77,6 +85,92 @@ def decode_quant(buf: bytes, n_instances: int, d: int, bits: int):
     codes = codes.reshape(n_instances, d).astype(np.float32)
     lo, step = head[:, :1], head[:, 1:]
     return lo + (codes + 0.5) * step
+
+
+# ---------------------------------------------------------------------------
+# Payload serialization — one codec for every compressor kind.
+# ---------------------------------------------------------------------------
+
+def encode_payload(p: Payload) -> bytes:
+    """Serialize a Payload to the exact bitstream a two-party socket carries.
+
+    Layout per kind (leading instance dims flattened, C order):
+      dense/slice : values f32
+      sparse      : values f32, then indices packed @ r = ceil(log2 d) bits
+      quant       : header f32 (lo, step)/instance, then codes packed @ bits
+      sparse_quant: header f32, then indices packed @ r, then codes @ bits
+    """
+    m = p.meta
+    kind = m.kind
+    if kind in ("dense", "slice"):
+        return np.asarray(p.values).astype("<f4").tobytes()
+    if kind == "sparse":
+        return (np.asarray(p.values).astype("<f4").tobytes()
+                + _pack_bits(np.asarray(p.indices), index_bits(m.d)))
+    if kind == "quant":
+        return (np.asarray(p.header).astype("<f4").tobytes()
+                + _pack_bits(np.asarray(p.values), m.bits))
+    if kind == "sparse_quant":
+        return (np.asarray(p.header).astype("<f4").tobytes()
+                + _pack_bits(np.asarray(p.indices), index_bits(m.d))
+                + _pack_bits(np.asarray(p.values), m.bits))
+    raise ValueError(kind)
+
+
+def decode_payload(buf: bytes, meta: PayloadMeta, batch_shape) -> Payload:
+    """Inverse of `encode_payload`; returns a Payload of numpy arrays."""
+    n = int(np.prod(batch_shape, dtype=np.int64)) if batch_shape else 1
+    kind, d, k = meta.kind, meta.d, meta.k
+    if kind in ("dense", "slice"):
+        w = d if kind == "dense" else k
+        vals = np.frombuffer(buf, dtype="<f4", count=n * w).copy()
+        return Payload(meta=meta, values=vals.reshape(*batch_shape, w))
+    if kind == "sparse":
+        vals = np.frombuffer(buf[: 4 * n * k], dtype="<f4").copy()
+        idx = _unpack_bits(buf[4 * n * k:], index_bits(d), n * k)
+        return Payload(meta=meta,
+                       values=vals.reshape(*batch_shape, k),
+                       indices=idx.astype(np.uint16).reshape(*batch_shape, k))
+    if kind == "quant":
+        head = np.frombuffer(buf[: 8 * n], dtype="<f4").copy()
+        codes = _unpack_bits(buf[8 * n:], meta.bits, n * d)
+        return Payload(meta=meta,
+                       values=codes.astype(np.uint8).reshape(*batch_shape, d),
+                       header=head.reshape(*batch_shape, 2))
+    if kind == "sparse_quant":
+        r = index_bits(d)
+        head = np.frombuffer(buf[: 8 * n], dtype="<f4").copy()
+        off = 8 * n
+        idx_nbytes = (n * k * r + 7) // 8
+        idx = _unpack_bits(buf[off: off + idx_nbytes], r, n * k)
+        codes = _unpack_bits(buf[off + idx_nbytes:], meta.bits, n * k)
+        return Payload(meta=meta,
+                       values=codes.astype(np.uint8).reshape(*batch_shape, k),
+                       indices=idx.astype(np.uint16).reshape(*batch_shape, k),
+                       header=head.reshape(*batch_shape, 2))
+    raise ValueError(kind)
+
+
+def payload_nbytes(p: Payload) -> int:
+    """Measured socket bytes of a payload (bit-packed, headers included)."""
+    return len(encode_payload(p))
+
+
+def payload_bits_per_instance(meta: PayloadMeta) -> float:
+    """Analytic forward wire bits per instance for a payload kind — the
+    codec-side counterpart of `table2_row` (cross-checked in tests)."""
+    kind, d, k, r = meta.kind, meta.d, meta.k, index_bits(meta.d)
+    if kind == "dense":
+        return d * FLOAT_BITS
+    if kind == "slice":
+        return k * FLOAT_BITS
+    if kind == "sparse":
+        return k * (FLOAT_BITS + r)
+    if kind == "quant":
+        return d * meta.bits + 2 * FLOAT_BITS
+    if kind == "sparse_quant":
+        return k * (meta.bits + r) + 2 * FLOAT_BITS
+    raise ValueError(kind)
 
 
 # ---------------------------------------------------------------------------

@@ -1,8 +1,11 @@
-"""jit'd public wrappers around the randtopk Pallas kernel.
+"""jit'd public wrappers around the randtopk Pallas kernels.
 
-The kernel produces the deterministic top-k support; the Eq. (7)
-randomization (Binomial pool split + Gumbel race) composes on top in plain
-jnp — it is O(d) elementwise and not a hot spot.
+These are the `backend="pallas"` implementations behind
+`core.selection.topk_mask` / `randtopk_mask` (interpret mode off-TPU,
+Mosaic on a TPU runtime). The deterministic support and the Eq. (7)
+randomization (Binomial pool split + Gumbel race) both run in-kernel; only
+the PRNG draws (Gumbel noise, Binomial counts) are generated outside with
+`jax.random` and streamed in as kernel operands.
 """
 from __future__ import annotations
 
@@ -11,28 +14,26 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core import selection
 from repro.kernels.randtopk import kernel
 
 
 @partial(jax.jit, static_argnames=("k", "interpret"))
 def topk_mask(x, k: int, *, interpret: bool = True):
+    if k >= x.shape[-1]:
+        return jnp.ones_like(x, dtype=bool)
     mask, _ = kernel.topk_mask_threshold(x, k, interpret=interpret)
     return mask
 
 
 @partial(jax.jit, static_argnames=("k", "alpha", "interpret"))
 def randtopk_mask(x, k: int, alpha: float, key, *, interpret: bool = True):
-    """Kernel-backed Eq. (7) selection mask."""
+    """Kernel-backed Eq. (7) selection mask (fused top-k + Gumbel race)."""
+    from repro.core import selection
+
     d = x.shape[-1]
     if k >= d:
         return jnp.ones_like(x, dtype=bool)
-    is_top, _ = kernel.topk_mask_threshold(x, k, interpret=interpret)
     kb, kg = jax.random.split(key)
-    draws = jax.random.bernoulli(kb, alpha, x.shape[:-1] + (k,))
-    m = jnp.clip(jnp.sum(draws.astype(jnp.int32), axis=-1, keepdims=True),
-                 0, min(k, d - k))
+    m = selection.binomial_nontop_count(kb, alpha, k, d, x.shape[:-1])
     g = jax.random.gumbel(kg, x.shape, dtype=jnp.float32)
-    sel_top = selection._select_m_from_pool(g, is_top, k - m, k)
-    sel_non = selection._select_m_from_pool(g, ~is_top, m, k)
-    return sel_top | sel_non
+    return kernel.randtopk_mask_kernel(x, g, m, k, interpret=interpret)

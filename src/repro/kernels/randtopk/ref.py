@@ -1,4 +1,5 @@
-"""Pure-jnp oracle for the randtopk kernels."""
+"""Pure-jnp oracle for the randtopk kernels (always the XLA path, so the
+kernels can be validated against it regardless of the ambient backend)."""
 from __future__ import annotations
 
 import jax
@@ -7,7 +8,7 @@ from repro.core import selection
 
 
 def topk_mask(x, k: int):
-    return selection.topk_mask(x, k)
+    return selection.topk_mask(x, k, backend="xla")
 
 
 def kth_threshold(x, k: int):
@@ -15,4 +16,4 @@ def kth_threshold(x, k: int):
 
 
 def randtopk_mask(x, k: int, alpha: float, key):
-    return selection.randtopk_mask(x, k, alpha, key)
+    return selection.randtopk_mask(x, k, alpha, key, backend="xla")

@@ -60,10 +60,13 @@ def main(argv=None):
     if cfg.split:
         per_tok = protocol.wire_bytes_per_step(cfg, args.batch, 1,
                                                training=False)
+        measured = protocol.measured_payload_bytes(cfg, args.batch, 1,
+                                                   training=False)
     print(f"generated {out.shape} in {dt:.2f}s "
           f"({dt/max(1, args.gen-1)*1e3:.1f} ms/token)")
     if cfg.split:
-        print(f"cut-layer wire: {per_tok:.0f} B/token-batch "
+        print(f"cut-layer wire: {per_tok:.0f} B/token-batch analytic, "
+              f"{measured} B measured payload "
               f"({cfg.split.compressor}, k={cfg.split.k}) vs "
               f"{cfg.d_model*4*args.batch:.0f} B uncompressed")
     print("sample:", out[0, :16].tolist())

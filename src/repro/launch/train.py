@@ -37,6 +37,10 @@ def main(argv=None):
     ap.add_argument("--k", type=int, default=16)
     ap.add_argument("--alpha", type=float, default=0.1)
     ap.add_argument("--cut", type=int, default=0)
+    ap.add_argument("--selection-backend", default=None,
+                    choices=["auto", "xla", "pallas"],
+                    help="top-k selection backend (default: pallas on TPU, "
+                         "xla elsewhere)")
     ap.add_argument("--mesh", default=None, help="e.g. 2,4 for (data,model)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
@@ -51,19 +55,31 @@ def main(argv=None):
             cut = max(g, cut // g * g)
         cfg = cfg.with_(split=SplitConfig(cut_layer=cut,
                                           compressor=args.split, k=args.k,
-                                          alpha=args.alpha))
+                                          alpha=args.alpha,
+                                          backend=args.selection_backend))
     mesh = None
     if args.mesh:
+        from repro.launch.mesh import make_mesh
+
         shape = tuple(int(x) for x in args.mesh.split(","))
-        mesh = jax.make_mesh(shape, ("data", "model")[: len(shape)],
-                             axis_types=(jax.sharding.AxisType.Auto,)
-                             * len(shape))
+        mesh = make_mesh(shape, ("data", "model")[: len(shape)])
     rt = Runtime(mesh=mesh, training=True)
 
     params = transformer.init_model(jax.random.key(0), cfg)
     opt = adamw_init(params)
     print(f"arch={cfg.name} params={count_params(params):,} "
           f"devices={jax.device_count()} split={cfg.split}")
+    if cfg.split:
+        from repro.split import protocol
+
+        analytic = protocol.wire_bytes_per_step(cfg, args.batch, args.seq,
+                                                training=True)
+        measured = protocol.measured_payload_bytes(cfg, args.batch, args.seq,
+                                                   training=False,
+                                                   key=jax.random.key(3))
+        print(f"cut-layer wire/step: {analytic:.0f} B analytic (fwd+bwd), "
+              f"{measured} B measured fwd payload "
+              f"(dense fwd would be {args.batch*args.seq*cfg.d_model*4} B)")
 
     start = 0
     if args.ckpt_dir:

@@ -20,6 +20,8 @@ class SplitConfig:
     quant_bits: int = 4
     l1_lam: float = 1e-4
     transfer_over_pod: bool = True  # ppermute payload across the pod axis
+    backend: Optional[str] = None   # selection backend: None->auto (pallas on
+                                    # TPU, xla elsewhere), 'xla', 'pallas'
 
 
 @dataclasses.dataclass(frozen=True)

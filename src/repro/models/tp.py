@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.models.config import Runtime
 
 
@@ -43,8 +44,8 @@ def gather_seq(y, rt: Runtime):
     def f(y_l):
         return jax.lax.all_gather(y_l, "model", axis=1, tiled=True)
 
-    return jax.shard_map(f, mesh=mesh, in_specs=(in_spec,),
-                         out_specs=out_spec, check_vma=False)(y)
+    return shard_map(f, mesh=mesh, in_specs=(in_spec,),
+                     out_specs=out_spec, check_vma=False)(y)
 
 
 def out_proj_rs(h, w, rt: Runtime, *, w_spec=P("model", "data")):
@@ -74,5 +75,5 @@ def out_proj_rs(h, w, rt: Runtime, *, w_spec=P("model", "data")):
         return jax.lax.psum_scatter(y, "model", scatter_dimension=1,
                                     tiled=True)
 
-    return jax.shard_map(f, mesh=mesh, in_specs=(h_spec, w_spec),
-                         out_specs=o_spec)(h, w)
+    return shard_map(f, mesh=mesh, in_specs=(h_spec, w_spec),
+                     out_specs=o_spec)(h, w)

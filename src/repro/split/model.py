@@ -1,4 +1,10 @@
-"""SplitModel: backbone forward with the cut-layer compression boundary."""
+"""SplitModel: backbone forward with the cut-layer compression boundary.
+
+The boundary is the packed-payload codec of `split.protocol.cut_boundary`:
+the bottom model's activation is `encode`d to its wire form (values /
+codes / indices / headers), ppermuted across the pod axis leaf-by-leaf, and
+`decode`d before the top model — so the tensor bytes crossing the pod
+boundary are exactly the Table-2 compressed sizes in both directions."""
 from __future__ import annotations
 
 import jax
@@ -10,7 +16,8 @@ from repro.split import protocol
 
 
 def forward(params, cfg: ArchConfig, rt: Runtime, batch, *, key=None):
-    """Split-aware forward: bottom layers -> compress/transfer -> top layers.
+    """Split-aware forward: bottom layers -> encode/transfer/decode -> top
+    layers.
 
     Returns (logits, aux) where aux folds the MoE balance loss and the L1
     cut-activation penalty.

@@ -1,4 +1,4 @@
-"""Cut-layer transfer protocol.
+"""Cut-layer transfer protocol — one generic encode/transfer/decode path.
 
 Maps the split-learning party-to-party socket onto the TPU fabric: the two
 parties are the two pods of the production mesh, and the compressed payload
@@ -10,47 +10,67 @@ Placement is *symmetrized SPMD split learning*: the batch is sharded over
 and as label owner for the other half — every sample's cut activation crosses
 the pod boundary exactly once per direction, so pod-boundary traffic per
 sample is identical to classic two-party SL while keeping both pods busy
-(bidirectional split learning). Wire bytes therefore scale with the paper's
-compressed size: k float values + k uint16 indices per token forward, k float
-values backward (Table 2).
+(bidirectional split learning).
 
-On a single-pod mesh (or no mesh) the transfer is the identity — parties are
-co-located and the savings show up as reduced cut-boundary tensor bytes only.
+The transfer is payload-typed: `cut_boundary` calls `Compressor.encode`,
+ppermutes every wire leaf of the resulting `core.payload.Payload` (so
+quantization moves uint8 codes + a 2-float header per token — not the dense
+dequantized tensor), and `Compressor.decode`s on the far side. There are no
+per-compressor branches; the payload's static `meta.kind` drives both the
+forward transfer and the backward gradient routing:
+
+  forward wire   = payload leaves            (Table 2 'Compressed size fwd')
+  backward wire  = k masked gradient floats for sparse/slice kinds (the
+                   feature owner already holds the indices), the dense
+                   gradient for dense/quant kinds (STE through the
+                   quantizer)                (Table 2 'Compressed size bwd')
+
+realized with a custom VJP whose backward rule ppermutes exactly those
+leaves back. On a single-pod mesh (or no mesh) the transfer is the identity
+— parties are co-located and the savings show up as reduced cut-boundary
+tensor bytes only.
 """
 from __future__ import annotations
-
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import compressors, selection
+from repro.compat import shard_map
+from repro.core import compressors
+from repro.core.payload import Payload
 from repro.models.config import ArchConfig, Runtime, SplitConfig
 
 
 def make_cut_compressor(sc: SplitConfig) -> compressors.Compressor:
-    if sc.compressor in ("topk", "randtopk"):
-        kw = {"k": sc.k}
-        if sc.compressor == "randtopk":
-            kw["alpha"] = sc.alpha
-        return compressors.make_compressor(sc.compressor, **kw)
-    if sc.compressor == "size_reduction":
-        return compressors.SizeReduction(k=sc.k)
-    if sc.compressor == "quant":
-        return compressors.Quantization(bits=sc.quant_bits)
+    """Config -> codec object (factory; the protocol itself is generic)."""
+    kw = {}
+    if sc.compressor in ("topk", "randtopk", "randtopk_quant",
+                         "size_reduction"):
+        kw["k"] = sc.k
+    if sc.compressor in ("randtopk", "randtopk_quant"):
+        kw["alpha"] = sc.alpha
+    if sc.compressor in ("quant", "randtopk_quant"):
+        kw["bits"] = sc.quant_bits
     if sc.compressor == "l1":
-        return compressors.L1Reg(lam=sc.l1_lam)
-    return compressors.Compressor()
+        kw["lam"] = sc.l1_lam
+    if sc.backend is not None:
+        kw["backend"] = sc.backend
+    return compressors.make_compressor(sc.compressor, **kw)
 
 
-def _pod_permute(rt: Runtime, *leaves):
-    """ppermute every array along the pod axis (0 <-> 1)."""
+def _pod_permute(rt: Runtime, *leaves, inverse: bool = False):
+    """ppermute every array along the pod axis (0 <-> 1).
+
+    `inverse=True` applies the inverse permutation (used by the backward
+    wire so cotangents return to the pod that produced the activation).
+    """
     mesh = rt.mesh
     if mesh is None or "pod" not in mesh.axis_names or mesh.shape["pod"] < 2:
         return leaves
     n_pod = mesh.shape["pod"]
-    perm = [(i, (i + 1) % n_pod) for i in range(n_pod)]
+    step = -1 if inverse else 1
+    perm = [(i, (i + step) % n_pod) for i in range(n_pod)]
 
     def spec_for(a):
         # batch axis is dim 0, sharded over (pod, data); rest replicated/model
@@ -59,7 +79,7 @@ def _pod_permute(rt: Runtime, *leaves):
     def body(*xs):
         return tuple(jax.lax.ppermute(x, "pod", perm) for x in xs)
 
-    out = jax.shard_map(
+    out = shard_map(
         body, mesh=mesh,
         in_specs=tuple(spec_for(a) for a in leaves),
         out_specs=tuple(spec_for(a) for a in leaves),
@@ -67,62 +87,87 @@ def _pod_permute(rt: Runtime, *leaves):
     return out
 
 
+def _transfer_payload(rt: Runtime, p: Payload, inverse: bool = False) -> Payload:
+    """Move every wire leaf of a payload across the pod boundary."""
+    names = [n for n, _ in p.wire_leaves()]
+    arrs = _pod_permute(rt, *[a for _, a in p.wire_leaves()], inverse=inverse)
+    return p.with_leaves(**dict(zip(names, arrs)))
+
+
+# ---------------------------------------------------------------------------
+# Backward wire rules, dispatched on the payload kind (not the compressor).
+# ---------------------------------------------------------------------------
+
+def _grad_to_wire(kind: str, g, idx_far, k: int):
+    """Label-owner side: the gradient leaves that cross back (Table 2 bwd)."""
+    if kind in ("sparse", "sparse_quant"):
+        return jnp.take_along_axis(g, idx_far.astype(jnp.int32), axis=-1)
+    if kind == "slice":
+        return g[..., :k]
+    return g  # dense / quant: full-precision dense gradient
+
+
+def _grad_from_wire(kind: str, gw, idx_local, d: int):
+    """Feature-owner side: route the wire gradient onto the activation.
+
+    Sparse/slice kinds scatter onto the forward support (the paper's
+    same-mask backward); dense/quant kinds are the identity (STE)."""
+    if kind in ("sparse", "sparse_quant"):
+        out = jnp.zeros(gw.shape[:-1] + (d,), gw.dtype)
+        return jnp.put_along_axis(out, idx_local.astype(jnp.int32), gw,
+                                  axis=-1, inplace=False)
+    if kind == "slice":
+        pad = [(0, 0)] * (gw.ndim - 1) + [(0, d - gw.shape[-1])]
+        return jnp.pad(gw, pad)
+    return gw
+
+
+def _transport(comp: compressors.Compressor, x, rt: Runtime, key,
+               over_pod: bool):
+    """encode -> ppermute payload leaves -> decode, with the payload-typed
+    backward wire attached via custom VJP."""
+    kind = comp.wire_kind
+    d = x.shape[-1]
+    k_eff = min(getattr(comp, "k", 0), d)
+
+    def _encode_transfer(x):
+        p = comp.encode(x, key=key, training=rt.training)
+        pt = _transfer_payload(rt, p) if over_pod else p
+        return p, pt
+
+    @jax.custom_vjp
+    def run(x):
+        _, pt = _encode_transfer(x)
+        return comp.decode(pt, shape=x.shape, dtype=x.dtype)
+
+    def run_fwd(x):
+        p, pt = _encode_transfer(x)
+        y = comp.decode(pt, shape=x.shape, dtype=x.dtype)
+        return y, (p.indices, pt.indices)
+
+    def run_bwd(res, g):
+        idx_local, idx_far = res
+        gw = _grad_to_wire(kind, g, idx_far, k_eff)
+        if over_pod:
+            (gw,) = _pod_permute(rt, gw, inverse=True)
+        return (_grad_from_wire(kind, gw, idx_local, d),)
+
+    run.defvjp(run_fwd, run_bwd)
+    return run(x)
+
+
 def cut_boundary(x, cfg: ArchConfig, rt: Runtime, key) -> tuple:
-    """Compress the cut activation (B, S, d), move it across the pod
-    boundary, decompress on the far side. Returns (x_top, l1_penalty)."""
+    """Compress the cut activation (B, S, d), move the packed payload across
+    the pod boundary, decode on the far side. Returns (x_top, l1_penalty).
+
+    One generic path for every compressor — the payload object is the whole
+    interface between the compressor, the wire, and the far side."""
     sc = cfg.split
     comp = make_cut_compressor(sc)
-    B, S, d = x.shape
-    zero = jnp.zeros((), jnp.float32)
-
-    if isinstance(comp, compressors.L1Reg):
-        pen = comp.loss_penalty(x.reshape(-1, d))
-        if rt.training:
-            (y,) = _pod_permute(rt, x) if sc.transfer_over_pod else (x,)
-            return rt.shard(y, "batch", None, None), pen
-        y, _ = comp.forward(x, training=False)
-        (y,) = _pod_permute(rt, y) if sc.transfer_over_pod else (y,)
-        return rt.shard(y, "batch", None, None), pen
-
-    if isinstance(comp, compressors.Quantization):
-        y, _ = comp.forward(x, training=rt.training)  # STE through quantize
-        # wire = int codes + per-token range; we model it by sending the
-        # dequantized tensor in int8-equivalent width is not expressible, so
-        # the pod transfer moves the dense dequantized tensor; roofline
-        # accounting uses wire.py for the paper-exact byte count.
-        (y,) = _pod_permute(rt, y) if sc.transfer_over_pod else (y,)
-        return rt.shard(y, "batch", None, None), zero
-
-    if isinstance(comp, compressors.SizeReduction):
-        vals = x[..., : sc.k]                                    # (B,S,k)
-        (vals,) = _pod_permute(rt, vals) if sc.transfer_over_pod else (vals,)
-        y = jnp.pad(vals, ((0, 0), (0, 0), (0, d - sc.k)))
-        return rt.shard(y, "batch", None, None), zero
-
-    if isinstance(comp, compressors.TopK):  # TopK or RandTopK
-        if isinstance(comp, compressors.RandTopK) and rt.training:
-            mask = selection.randtopk_mask(x, sc.k, sc.alpha, key)
-        else:
-            mask = selection.topk_mask(x, sc.k)
-        mask = jax.lax.stop_gradient(mask)
-        # payload: k values + k uint16 indices per token (d_model < 65536)
-        score = jnp.where(mask, jnp.abs(x.astype(jnp.float32)), -1.0)
-        _, idx = jax.lax.top_k(score, sc.k)                      # (B,S,k)
-        vals = jnp.take_along_axis(x, idx, axis=-1)
-        idx16 = idx.astype(jnp.uint16)
-        if sc.transfer_over_pod:
-            vals, idx16 = _pod_permute(rt, vals, idx16)
-        idx = idx16.astype(jnp.int32)
-        y = jnp.zeros_like(x).at[
-            jnp.arange(B)[:, None, None],
-            jnp.arange(S)[None, :, None],
-            idx,
-        ].set(vals)
-        return rt.shard(y, "batch", None, None), zero
-
-    # identity / vanilla SL
-    (y,) = _pod_permute(rt, x) if sc.transfer_over_pod else (x,)
-    return rt.shard(y, "batch", None, None), zero
+    d = x.shape[-1]
+    pen = comp.loss_penalty(x.reshape(-1, d))
+    y = _transport(comp, x, rt, key, over_pod=sc.transfer_over_pod)
+    return rt.shard(y, "batch", None, None), pen
 
 
 def wire_bytes_per_step(cfg: ArchConfig, batch: int, seq: int,
@@ -136,3 +181,22 @@ def wire_bytes_per_step(cfg: ArchConfig, batch: int, seq: int,
     method = sc.compressor
     return wire.bytes_per_step(method, cfg.d_model, batch * seq, k=sc.k,
                                bits=sc.quant_bits, training=training)
+
+
+def measured_payload_bytes(cfg: ArchConfig, batch: int, seq: int,
+                           *, training: bool = False, key=None) -> int:
+    """Byte-exact forward payload size for one (batch, seq) step, measured by
+    actually encoding a probe activation and serializing it with
+    `wire.encode_payload` — the codec-side cross-check of
+    `wire_bytes_per_step`'s analytic formula."""
+    import numpy as np
+
+    from repro.core import wire
+
+    sc = cfg.split
+    if sc is None:
+        return 0
+    comp = make_cut_compressor(sc)
+    probe = jax.random.normal(jax.random.key(0), (batch, seq, cfg.d_model))
+    p = comp.encode(probe, key=key, training=training)
+    return wire.payload_nbytes(jax.tree.map(np.asarray, p))

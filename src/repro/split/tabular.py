@@ -91,7 +91,8 @@ def _forward_view(o_b, spec: SplitSpec, key, training: bool):
     elif spec.method == "size_reduction":
         mask = jnp.broadcast_to(jnp.arange(d) < spec.k, o_b.shape)
     elif spec.method == "quant":
-        deq, _, _, _ = C._quant_fwd(o_b, spec.quant_bits)
+        comp = C.Quantization(bits=spec.quant_bits)
+        deq = comp.decode(comp.encode(o_b), dtype=o_b.dtype)
         return deq, None
     else:
         raise ValueError(spec.method)
@@ -173,7 +174,8 @@ def evaluate(bottom, top, spec: SplitSpec, x, y, *, quant=True) -> float:
         return float(_accuracy(bottom, top, x, y, 2, spec.k))
     if spec.method == "quant":
         o = bottom_fn(bottom, x)
-        o, _, _, _ = C._quant_fwd(o, spec.quant_bits)
+        comp = C.Quantization(bits=spec.quant_bits)
+        o = comp.decode(comp.encode(o), dtype=o.dtype)
         logits = o @ top["w"] + top["b"]
         return float(jnp.mean((jnp.argmax(logits, -1) == y).astype(
             jnp.float32)))

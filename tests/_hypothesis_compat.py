@@ -1,0 +1,73 @@
+"""`hypothesis` shim: use the real library when installed, else a tiny
+deterministic fallback so the property tests still run (with fixed-seed
+sampled examples) instead of erroring at collection.
+
+The fallback implements exactly the subset these tests use:
+`given(st.integers(...), st.floats(...))` + `settings(max_examples=,
+deadline=)`. Examples are drawn from `random.Random(0)`, so failures are
+reproducible run-to-run.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example_from(self, rng):
+            return self._draw(rng)
+
+    class st:  # noqa: N801 - mimic `hypothesis.strategies` module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda rng: rng.choice(options))
+
+    def settings(max_examples: int = 20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            import inspect
+
+            @functools.wraps(fn)
+            def run(*args, **kwargs):
+                rng = random.Random(0)
+                for _ in range(getattr(fn, "_max_examples", 20)):
+                    fn(*args,
+                       *(s.example_from(rng) for s in strategies), **kwargs)
+
+            # strategies fill the trailing parameters; hide them from pytest
+            # so it doesn't look for same-named fixtures
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())[: -len(strategies)]
+            run.__signature__ = sig.replace(parameters=params)
+            del run.__wrapped__
+            return run
+
+        return deco

@@ -39,8 +39,8 @@ def test_mesh_matches_single_device_all_families():
         from repro.models.config import Runtime
         from repro.data.pipeline import make_lm_batch
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         for arch in ["yi_6b", "qwen3_moe_235b_a22b", "zamba2_7b",
                      "rwkv6_1p6b", "llama_3_2_vision_90b", "whisper_tiny"]:
             cfg = configs.get(arch, smoke=True)

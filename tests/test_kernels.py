@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.randtopk import kernel as tk_kernel, ops as tk_ops, \
     ref as tk_ref
@@ -46,11 +46,87 @@ def test_randtopk_kernel_counts_and_distribution():
         np.asarray(m0), np.asarray(tk_ops.topk_mask(x, 8)))
 
 
+def test_randtopk_kernel_matches_xla_reference():
+    """The in-kernel Eq. (7) selection must reproduce the XLA path draw for
+    draw — same key, same Binomial split, same Gumbel race."""
+    x = jax.random.normal(jax.random.key(3), (16, 128))
+    for alpha in (0.0, 0.3, 1.0):
+        for seed in range(3):
+            key = jax.random.key(100 + seed)
+            mk = tk_ops.randtopk_mask(x, 8, alpha, key)
+            mr = tk_ref.randtopk_mask(x, 8, alpha, key)
+            np.testing.assert_array_equal(np.asarray(mk), np.asarray(mr),
+                                          err_msg=f"alpha={alpha} s={seed}")
+
+
+def test_randtopk_kernel_alpha_statistics():
+    """Non-top-k pick frequency from the fused kernel tracks alpha*k."""
+    d, k, alpha = 64, 8, 0.3
+    x = jax.random.normal(jax.random.key(0), (1, d))
+    is_top = np.asarray(tk_ops.topk_mask(x, k))[0]
+    keys = jax.random.split(jax.random.key(7), 300)
+    masks = np.stack([np.asarray(tk_ops.randtopk_mask(x, k, alpha, kk))[0]
+                      for kk in keys])
+    non_top = masks[:, ~is_top].sum(axis=1)
+    assert abs(non_top.mean() - alpha * k) < 0.35, non_top.mean()
+
+
 def test_topk_kernel_ties():
     x = jnp.concatenate([jnp.ones((4, 16)), 2 * jnp.ones((4, 16))], -1)
     mask, _ = tk_kernel.topk_mask_threshold(x, 20)
     np.testing.assert_array_equal(np.asarray(mask.sum(-1)), 20)
     assert bool(mask[:, 16:].all())  # all the 2s selected
+
+
+@pytest.mark.parametrize("name,x,k", [
+    ("ties", jnp.tile(jnp.array([[3.0, 1.0, 1.0, 1.0, 1.0, 2.0, 2.0, 0.5]]),
+                      (3, 1)), 4),
+    ("all_equal", jnp.full((4, 32), 1.5), 5),
+    ("zeros", jnp.zeros((4, 32)), 6),
+    ("negatives", -jnp.abs(jax.random.normal(jax.random.key(8), (5, 64))), 7),
+    ("mixed_sign_ties", jnp.array([[-2.0, 2.0, -2.0, 1.0, -1.0, 0.0]]), 3),
+    ("k_equals_d", jax.random.normal(jax.random.key(9), (3, 16)), 16),
+    ("single_spike", jnp.eye(8, 128) * 100.0, 2),
+])
+def test_topk_kernel_adversarial_parity(name, x, k):
+    """Interpret-mode kernel vs selection.topk_mask on adversarial inputs:
+    exact ties, all-zero rows, negatives, k = d."""
+    from repro.core import selection
+
+    ref = selection.topk_mask(x, k, backend="xla")
+    via_dispatch = selection.topk_mask(x, k, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(via_dispatch), np.asarray(ref),
+                                  err_msg=name)
+    if k < x.shape[-1]:
+        mask, _ = tk_kernel.topk_mask_threshold(x, k)
+        np.testing.assert_array_equal(np.asarray(mask), np.asarray(ref),
+                                      err_msg=name)
+        np.testing.assert_array_equal(np.asarray(mask.sum(-1)), k)
+
+
+def test_selection_backend_dispatch():
+    """backend='pallas' and backend='xla' agree through the public API; the
+    env override REPRO_SELECTION_BACKEND is honored."""
+    import os
+
+    from repro.core import selection
+
+    x = jax.random.normal(jax.random.key(10), (6, 96))
+    np.testing.assert_array_equal(
+        np.asarray(selection.topk_mask(x, 9, backend="pallas")),
+        np.asarray(selection.topk_mask(x, 9, backend="xla")))
+    key = jax.random.key(11)
+    np.testing.assert_array_equal(
+        np.asarray(selection.randtopk_mask(x, 9, 0.25, key,
+                                           backend="pallas")),
+        np.asarray(selection.randtopk_mask(x, 9, 0.25, key, backend="xla")))
+    with pytest.raises(ValueError):
+        selection.topk_mask(x, 9, backend="cuda")
+    os.environ["REPRO_SELECTION_BACKEND"] = "xla"
+    try:
+        assert selection._resolve_backend(None) == "xla"
+    finally:
+        del os.environ["REPRO_SELECTION_BACKEND"]
 
 
 @pytest.mark.parametrize("shape", SHAPES)

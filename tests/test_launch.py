@@ -83,8 +83,8 @@ def test_dryrun_small_mesh_train_and_decode():
         from repro.roofline import analysis
         import repro.configs as configs
 
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         cfg = configs.get("qwen3-8b", smoke=True).with_(
             split=SplitConfig(cut_layer=1, compressor="randtopk", k=16))
         shape = S.ShapeSpec("t", "train", 64, 8)

@@ -1,7 +1,7 @@
 """Byte-exact wire format round-trips + property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import wire
 
