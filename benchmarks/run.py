@@ -27,8 +27,9 @@ def main() -> None:
     from benchmarks import (alpha_sweep, appendixB_privacy,
                             combined_compression, error_feedback, fig2_toy,
                             fig4_convergence, fig5_distribution,
-                            roofline_report, table2_sizes, table3_accuracy,
-                            table7_dbpedia_geometry, wire_packing)
+                            roofline_report, serve_throughput, table2_sizes,
+                            table3_accuracy, table7_dbpedia_geometry,
+                            wire_packing)
 
     sections = {
         "table2": table2_sizes.main,
@@ -43,6 +44,7 @@ def main() -> None:
         "privacy": appendixB_privacy.main,
         "roofline": roofline_report.main,
         "wire": wire_packing.main,
+        "serve": serve_throughput.main,
     }
     chosen = (args.only.split(",") if args.only else list(sections))
 

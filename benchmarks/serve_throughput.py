@@ -1,0 +1,118 @@
+"""Streaming serving throughput + measured wire bytes (clients x compressor).
+
+Runs the `repro.runtime` engine over a sweep of concurrent-client counts and
+cut-layer compressors (including a mixed dense/randtopk population in one
+session mix), and reports bytes/client/token from the *measured* payload
+frame sizes, cross-checked within 5% against the compressors' own
+`fwd_bits` accounting — the same analytics `benchmarks/table2_sizes.py`
+validates byte-exactly against the Table-2 rows. The latest run's
+trajectory point is written to the repo-root `BENCH_serve.json`
+(overwritten each run; history lives in version control).
+
+    PYTHONPATH=src python benchmarks/serve_throughput.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+import jax
+import numpy as np
+
+import repro.configs as configs
+from repro.models import transformer
+from repro.models.config import SplitConfig
+from repro.runtime import engine
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+BENCH_PATH = ROOT / "BENCH_serve.json"
+
+TOL = 0.05  # measured-vs-analytic relative tolerance (acceptance bar)
+
+
+def _mix_rows(cfg, res, emit) -> list:
+    """Per-compressor rows of one run: measured vs analytic bytes."""
+    rows = []
+    by_comp = {}
+    wire_fields = ("frames_up", "payload_bytes_up", "header_bytes_up",
+                   "frames_down", "bytes_down")
+    for comp, cs, ss in zip(res["compressor_objs"], res["client_stats"],
+                            res["server_stats"]):
+        # both parties count the same bytes off the same frames
+        # (tokens_out is client-side only: the server never sees the prompt)
+        assert all(cs[f] == ss[f] for f in wire_fields), (cs, ss)
+        by_comp.setdefault(comp, []).append(cs)
+    for comp, stats in sorted(by_comp.items(), key=lambda kv: kv[0].name):
+        name = comp.name
+        measured = float(np.mean(
+            [s["payload_bytes_up"] / s["frames_up"] for s in stats]))
+        header = float(np.mean(
+            [s["header_bytes_up"] / s["frames_up"] for s in stats]))
+        # the compressor's own Table-2 accounting (incl. quant range headers);
+        # byte-exact vs table2_row in benchmarks/table2_sizes.py
+        analytic = comp.fwd_bits(cfg.d_model) / 8
+        rel_err = abs(measured - analytic) / analytic
+        ok = rel_err < TOL
+        rows.append(dict(compressor=name, n_sessions=len(stats),
+                         measured_B_per_token=measured,
+                         framing_B_per_token=header,
+                         analytic_B_per_token=analytic, rel_err=rel_err,
+                         ok=bool(ok)))
+        emit(f"serve,{name},sessions={len(stats)},"
+             f"measured_B={measured:.1f},analytic_B={analytic:.1f},"
+             f"framing_B={header:.1f},rel_err={rel_err:.4f}")
+        emit(f"serve_check,{name},bytes_within_5pct,{ok}")
+    return rows
+
+
+def main(emit=print, smoke: bool = False) -> bool:
+    cfg = configs.get("qwen3-8b", smoke=True).with_(
+        split=SplitConfig(cut_layer=1, compressor="randtopk", k=16))
+    params = transformer.init_model(jax.random.key(0), cfg)
+    d = cfg.d_model
+
+    # (n_clients, compressor mix) sweep; the mixed population exercises
+    # grouped-by-meta batched decode in one session mix.
+    mixed = ["identity", "randtopk:k=16"]
+    points = ([(8, mixed)] if smoke
+              else [(4, ["identity"]), (4, ["randtopk:k=16"]),
+                    (8, mixed), (16, mixed),
+                    (8, ["quant:bits=4"]), (8, ["randtopk_quant:k=16,bits=8"])])
+
+    all_rows, ok_all = [], True
+    for n_clients, mix in points:
+        res = engine.run_streaming(
+            cfg, n_clients=n_clients, prompt_len=4, gen=8,
+            max_batch=min(8, n_clients), max_wait=0.02,
+            compressor_mix=mix, params=params)
+        emit(f"serve,run,clients={n_clients},mix={'+'.join(mix)},"
+             f"tok_per_s={res['tokens_per_s']:.1f},"
+             f"mean_batch_fill={np.mean(res['batch_sizes']):.2f},"
+             f"wall_s={res['wall_s']:.2f}")
+        rows = _mix_rows(cfg, res, emit)
+        for r in rows:
+            r.update(n_clients=n_clients,
+                     tokens_per_s=res["tokens_per_s"],
+                     mean_batch_fill=float(np.mean(res["batch_sizes"])))
+            ok_all &= r["ok"]
+        all_rows.extend(rows)
+
+    dense_B = d * 4
+    emit(f"serve_check,all_compressors,measured_within_5pct,{ok_all}")
+    point = {"bench": "serve_throughput", "smoke": bool(smoke),
+             "arch": cfg.name, "d_model": d,
+             "uncompressed_B_per_token": dense_B, "rows": all_rows,
+             "ok": bool(ok_all)}
+    BENCH_PATH.write_text(json.dumps(point, indent=2) + "\n")
+    emit(f"serve,wrote,{BENCH_PATH.name}")
+    return ok_all
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="single 8-client dense+randtopk mix point")
+    args = ap.parse_args()
+    sys.exit(0 if main(smoke=args.smoke) else 1)

@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""Fail CI on README/docs links that point at nonexistent files.
+
+Checks every markdown link and image target in README.md and docs/*.md:
+relative targets must exist on disk (anchors are stripped; http(s)/mailto
+links are skipped). Also verifies that backtick-quoted repo paths of the
+form `dir/file.py` mentioned in those documents exist, so the README's
+benchmark table cannot rot silently.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+# `benchmarks/foo.py`-style inline path mentions (at least one slash)
+PATH_RE = re.compile(r"`([A-Za-z0-9_.\-]+(?:/[A-Za-z0-9_.\-]+)+)`")
+
+
+def _rel(md: pathlib.Path) -> str:
+    try:
+        return str(md.relative_to(ROOT))
+    except ValueError:
+        return str(md)
+
+
+def check_file(md: pathlib.Path) -> list:
+    errors = []
+    text = md.read_text()
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            errors.append(f"{_rel(md)}: broken link -> {target}")
+    for target in PATH_RE.findall(text):
+        if "*" in target or target.endswith("/"):
+            continue
+        # repo-relative path mention; ignore dotted module paths w/o suffix
+        if "." not in pathlib.Path(target).name:
+            continue
+        if not (ROOT / target).exists():
+            errors.append(f"{_rel(md)}: missing path -> {target}")
+    return errors
+
+
+def main() -> int:
+    files = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    errors = []
+    for md in files:
+        if md.exists():
+            errors.extend(check_file(md))
+        else:
+            errors.append(f"missing documentation file: {md}")
+    for e in errors:
+        print(f"check_docs: {e}", file=sys.stderr)
+    print(f"check_docs: {len(files)} files, "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} broken)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,8 +1,16 @@
 #!/usr/bin/env bash
 # Tier-1 verification — the command the driver runs after every PR.
 #
-#   scripts/ci.sh            # full tier-1 suite
+#   scripts/ci.sh            # full tier-1 suite + docs check + serving smoke
 #   scripts/ci.sh -m "not slow"   # quick pass (skip subprocess dry-runs)
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+# README/docs links must point at files that exist
+python scripts/check_docs.py
+
+# streaming serving smoke: 8-client dense/randtopk mix, measured bytes must
+# match the Table-2 analytics within 5% (writes BENCH_serve.json)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/serve_throughput.py --smoke
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -7,12 +7,15 @@ before the next compression, so information is delayed rather than lost:
 
     c_t = Comp(o_t + e_t);   e_{t+1} = (o_t + e_t) - c_t
 
-The paper never evaluates EF for split learning. It is NOT a free win here:
-in SL the "signal" is a per-sample activation, not a shared gradient vector,
-so the residual from one minibatch pairs with a DIFFERENT minibatch next
-step. We evaluate a per-CLASS residual memory (tokens of the same label
-share an error slot) — the closest meaningful SL analogue — and report
-whether it helps at high compression (see benchmarks/error_feedback.py).
+The paper never evaluates EF for split learning, and it is NOT a free win
+here: in SL the "signal" is a per-sample activation, not a shared gradient
+vector, so the residual from one minibatch pairs with a DIFFERENT minibatch
+next step. This module implements the closest meaningful SL analogue — a
+per-CLASS residual memory (tokens of the same label share an error slot) —
+and `benchmarks/error_feedback.py` reports whether it helps at high
+compression. The full caveat discussion (including the label-leakage
+implication of class-keyed state on the feature owner) is in
+docs/beyond-paper.md.
 """
 from __future__ import annotations
 
@@ -23,10 +26,36 @@ from repro.core import selection
 
 
 def ef_topk_forward(o, err, labels, k: int, n_slots: int):
-    """Per-class error-feedback top-k.
+    """Per-class error-feedback top-k: one compression step with memory.
 
-    o: (B, d) cut activations; err: (n_slots, d) residual memory;
-    labels: (B,) int — slot assignment. Returns (view, new_err).
+    Adds each sample's class residual to its activation, takes the top-k of
+    the corrected signal, and scatter-means what was dropped back into the
+    per-class slots (slots untouched by this batch keep their residual).
+
+    Args:
+      o:       (B, d) cut activations (the feature owner's bottom output).
+      err:     (n_slots, d) residual memory carried across steps; start from
+               zeros.
+      labels:  (B,) int class ids in [0, n_slots) — the slot assignment.
+               Using labels on the feature-owner side is itself a privacy
+               concession; see docs/beyond-paper.md.
+      k:       support size per sample.
+      n_slots: number of residual slots (= number of classes).
+
+    Returns:
+      (view, mask, new_err): the compressed (B, d) view to send (top-k of
+      o + residual, zeros elsewhere), the boolean support mask (apply it to
+      the returning gradient so backward matches the forward support), and
+      the updated residual memory to carry to the next step.
+
+    Usage (one training step; see `benchmarks/error_feedback.py` for the
+    full two-party loop)::
+
+        err = jnp.zeros((n_classes, d))
+        for x, y in batches:
+            o = bottom_fn(bottom_params, x)
+            view, mask, err = ef_topk_forward(o, err, y, k, n_classes)
+            ...  # send `view`; mask the gradient with `mask` on the way back
     """
     e_b = jnp.take(err, labels, axis=0)                    # (B, d)
     corrected = o + e_b

@@ -13,14 +13,26 @@ device transfer bytes, and the Table-2 analytic formulas are all derived from
 one object and cross-checked in tests. Bit packing is vectorized numpy
 (bit-shift matrix + `np.packbits`), little-endian within the stream —
 byte-identical to the historical per-bit layout.
+
+On top of the bare payload bitstream sits a length-prefixed *frame* layer
+(`encode_payload_frame` / `decode_frame` / `FrameReader`): the unit a
+streaming session actually sends. A frame carries a session id, a sequence
+number, and either a self-describing payload (kind / d / k / bits /
+batch shape — everything `decode_payload` needs, so the receiver holds no
+per-connection state) or a token reply / close marker. `repro.runtime` builds
+the multi-client serving loop on these frames; the normative layout spec
+(with executable examples) lives in docs/wire-format.md.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
+import struct
+from typing import Iterator, Optional, Tuple
 
 import numpy as np
 
-from repro.core.payload import Payload, PayloadMeta
+from repro.core.payload import KINDS, Payload, PayloadMeta
 
 FLOAT_BITS = 32
 
@@ -207,3 +219,151 @@ def bytes_per_step(method: str, d: int, n_instances: int, *, k: int = 0,
     row = table2_row(method, d, k=k, bits=bits)
     per_inst = row["fwd"] + (row["bwd"] if training else 0.0)
     return per_inst * d * FLOAT_BITS / 8 * n_instances
+
+
+# ---------------------------------------------------------------------------
+# Frame layer — the length-prefixed unit a streaming session sends.
+# Normative spec (with executable examples): docs/wire-format.md.
+# ---------------------------------------------------------------------------
+
+WIRE_VERSION = 1
+
+#: frame kinds
+FRAME_PAYLOAD = 1   # client -> server: one compressed cut activation
+FRAME_TOKENS = 2    # server -> client: greedy-decoded next token(s)
+FRAME_CLOSE = 3     # either direction: end of session
+
+# <u32 body_len> <u8 version> <u8 frame_kind> <u32 session> <u32 seq>
+_FRAME_HEAD = struct.Struct("<IBBII")
+# payload-frame subheader: <u8 kind_idx> <u32 d> <u32 k> <u8 bits> <u8 ndim>
+_PAYLOAD_HEAD = struct.Struct("<BIIBB")
+_TOKENS_HEAD = struct.Struct("<I")       # <u32 count>, then count x i32
+
+#: fixed per-frame byte overhead before any payload/token body
+FRAME_HEAD_NBYTES = _FRAME_HEAD.size
+
+
+@dataclasses.dataclass(frozen=True)
+class Frame:
+    """One decoded wire frame.
+
+    `header_nbytes` counts every byte that is framing/metadata (length
+    prefix, version, kind, session, seq, payload subheader);
+    `payload_nbytes` counts only the payload bitstream (token bytes for
+    FRAME_TOKENS). Byte accounting in `repro.runtime` keeps the two apart so
+    compression ratios are computed from the payload bytes the codec actually
+    produced, with framing overhead reported separately.
+    """
+
+    kind: int
+    session: int
+    seq: int
+    payload: Optional[Payload] = None       # FRAME_PAYLOAD
+    tokens: Optional[np.ndarray] = None     # FRAME_TOKENS, int32
+    header_nbytes: int = 0
+    payload_nbytes: int = 0
+
+    @property
+    def nbytes(self) -> int:
+        return self.header_nbytes + self.payload_nbytes
+
+
+def _frame(kind: int, session: int, seq: int, body: bytes) -> bytes:
+    head = _FRAME_HEAD.pack(len(body) + _FRAME_HEAD.size - 4, WIRE_VERSION,
+                            kind, session, seq)
+    return head + body
+
+
+def payload_frame_header_nbytes(p: Payload) -> int:
+    """Framing bytes of `encode_payload_frame(p)` — everything that is not
+    the payload bitstream (deterministic; used for byte accounting without
+    re-encoding the payload)."""
+    return _FRAME_HEAD.size + _PAYLOAD_HEAD.size + 4 * len(p.batch_shape)
+
+
+def encode_payload_frame(session: int, seq: int, p: Payload) -> bytes:
+    """Frame a payload: self-describing subheader + `encode_payload` bytes."""
+    m = p.meta
+    bshape = p.batch_shape
+    sub = _PAYLOAD_HEAD.pack(KINDS.index(m.kind), m.d, m.k, m.bits,
+                             len(bshape))
+    sub += struct.pack(f"<{len(bshape)}I", *bshape) if bshape else b""
+    return _frame(FRAME_PAYLOAD, session, seq, sub + encode_payload(p))
+
+
+def encode_token_frame(session: int, seq: int, tokens) -> bytes:
+    toks = np.asarray(tokens, dtype="<i4").ravel()
+    return _frame(FRAME_TOKENS, session, seq,
+                  _TOKENS_HEAD.pack(toks.size) + toks.tobytes())
+
+
+def encode_close_frame(session: int, seq: int = 0) -> bytes:
+    return _frame(FRAME_CLOSE, session, seq, b"")
+
+
+def decode_frame(buf, offset: int = 0) -> Optional[Tuple[Frame, int]]:
+    """Parse one frame starting at `offset` (bytes or bytearray).
+
+    Returns (frame, next_offset), or None if the buffer does not yet hold a
+    complete frame (stream reassembly — see `FrameReader`).
+    """
+    if len(buf) - offset < 4:
+        return None
+    (body_len,) = struct.unpack_from("<I", buf, offset)
+    end = offset + 4 + body_len
+    if len(buf) < end:
+        return None
+    _, version, kind, session, seq = _FRAME_HEAD.unpack_from(buf, offset)
+    if version != WIRE_VERSION:
+        raise ValueError(f"wire version {version}, expected {WIRE_VERSION}")
+    pos = offset + _FRAME_HEAD.size
+    if kind == FRAME_PAYLOAD:
+        kind_idx, d, k, bits, ndim = _PAYLOAD_HEAD.unpack_from(buf, pos)
+        pos += _PAYLOAD_HEAD.size
+        bshape = struct.unpack_from(f"<{ndim}I", buf, pos) if ndim else ()
+        pos += 4 * ndim
+        meta = PayloadMeta(KINDS[kind_idx], d=d, k=k, bits=bits)
+        payload = decode_payload(buf[pos:end], meta, bshape)
+        return (Frame(kind, session, seq, payload=payload,
+                      header_nbytes=pos - offset,
+                      payload_nbytes=end - pos), end)
+    if kind == FRAME_TOKENS:
+        (count,) = _TOKENS_HEAD.unpack_from(buf, pos)
+        pos += _TOKENS_HEAD.size
+        if pos + 4 * count != end:
+            raise ValueError(f"token frame count {count} disagrees with "
+                             f"body length {end - pos}")
+        toks = np.frombuffer(buf, dtype="<i4", count=count, offset=pos).copy()
+        return (Frame(kind, session, seq, tokens=toks,
+                      header_nbytes=_FRAME_HEAD.size + _TOKENS_HEAD.size,
+                      payload_nbytes=4 * count), end)
+    if kind == FRAME_CLOSE:
+        return (Frame(kind, session, seq,
+                      header_nbytes=_FRAME_HEAD.size), end)
+    raise ValueError(f"unknown frame kind {kind}")
+
+
+class FrameReader:
+    """Incremental stream reassembler: feed byte chunks, iterate frames.
+
+    Chunk boundaries need not align with frame boundaries — partial frames
+    are buffered until complete, and consumed prefixes are dropped.
+    """
+
+    def __init__(self):
+        self._buf = bytearray()
+
+    def feed(self, data: bytes) -> None:
+        self._buf.extend(data)
+
+    def frames(self) -> Iterator[Frame]:
+        while True:
+            # decode straight off the bytearray (no full-buffer copy);
+            # decode_payload copies out every array it returns
+            got = decode_frame(self._buf)
+            if got is None:
+                return
+            frame, consumed = got
+            # trim BEFORE yielding: an abandoned iterator must not re-yield
+            del self._buf[:consumed]
+            yield frame

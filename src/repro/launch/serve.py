@@ -1,34 +1,40 @@
-"""Serving driver: batched greedy decoding against a KV cache, with the
-split-learning cut compression applied to every generated token's forward
-payload (the paper's inference-communication target).
+"""Serving driver — a thin CLI over the streaming runtime.
+
+Spins up N simulated clients (feature owners, `--clients`; `--batch` is an
+alias), each holding the bottom model and compressing its cut activations,
+against one batching server holding the top model (`repro.runtime`). Every
+cut payload crosses an in-process byte channel as `core.wire` frames, so the
+reported bytes/client/token are measured frame sizes, cross-checked here
+against the Table-2 analytic prediction.
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
-        --batch 4 --prompt-len 16 --gen 32 --split randtopk --k 16
+        --clients 8 --prompt-len 16 --gen 32 --split randtopk --k 16
 """
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
 import repro.configs as configs
-from repro.launch.steps import make_serve_step
-from repro.models import transformer
-from repro.models.config import Runtime, SplitConfig
-from repro.split import protocol
+from repro.models.config import SplitConfig
+from repro.runtime import engine
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--clients", "--batch", dest="clients", type=int,
+                    default=4, help="concurrent client sessions")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--split", default=None)
     ap.add_argument("--k", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="server flush size (default min(8, clients))")
+    ap.add_argument("--max-wait", type=float, default=0.01,
+                    help="server batching window in seconds")
     args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch, smoke=args.smoke)
@@ -36,39 +42,28 @@ def main(argv=None):
         cfg = cfg.with_(split=SplitConfig(
             cut_layer=max(1, cfg.n_layers // 2), compressor=args.split,
             k=args.k))
-    rt = Runtime(mesh=None, training=False)
-    params = transformer.init_model(jax.random.key(0), cfg)
-    max_len = args.prompt_len + args.gen
-    cache = transformer.init_cache(params, cfg, rt, args.batch, max_len)
-    serve = jax.jit(make_serve_step(cfg, rt), donate_argnums=(1,))
 
-    prompt = jax.random.randint(jax.random.key(1),
-                                (args.batch, args.prompt_len), 0, cfg.vocab,
-                                dtype=jnp.int32)
-    # prefill token-by-token through the decode path (cache warm-up)
-    tok = prompt[:, :1]
-    for i in range(args.prompt_len):
-        nxt, cache = serve(params, cache, prompt[:, i: i + 1])
-    generated = [nxt]
-    t0 = time.time()
-    for _ in range(args.gen - 1):
-        nxt, cache = serve(params, cache, generated[-1])
-        generated.append(nxt)
-    dt = time.time() - t0
-    out = jnp.concatenate(generated, axis=1)
-    per_tok = 0.0
-    if cfg.split:
-        per_tok = protocol.wire_bytes_per_step(cfg, args.batch, 1,
-                                               training=False)
-        measured = protocol.measured_payload_bytes(cfg, args.batch, 1,
-                                                   training=False)
-    print(f"generated {out.shape} in {dt:.2f}s "
-          f"({dt/max(1, args.gen-1)*1e3:.1f} ms/token)")
-    if cfg.split:
-        print(f"cut-layer wire: {per_tok:.0f} B/token-batch analytic, "
-              f"{measured} B measured payload "
-              f"({cfg.split.compressor}, k={cfg.split.k}) vs "
-              f"{cfg.d_model*4*args.batch:.0f} B uncompressed")
+    res = engine.run_streaming(
+        cfg, n_clients=args.clients, prompt_len=args.prompt_len,
+        gen=args.gen, max_batch=args.max_batch, max_wait=args.max_wait)
+
+    out = res["tokens"]
+    fills = res["batch_sizes"]
+    print(f"served {args.clients} sessions x {args.gen} tokens in "
+          f"{res['wall_s']:.2f}s ({res['tokens_per_s']:.1f} tok/s, "
+          f"mean batch fill {np.mean(fills):.1f}/{res['max_batch']})")
+
+    # measured vs analytic wire bytes, per client per token
+    per_client = [s["payload_bytes_up"] / s["frames_up"]
+                  for s in res["client_stats"]]
+    header = [s["header_bytes_up"] / s["frames_up"]
+              for s in res["client_stats"]]
+    comp = res["compressor_objs"][0]
+    analytic = comp.fwd_bits(cfg.d_model) / 8  # models quant headers too
+    print(f"cut-layer wire: {np.mean(per_client):.1f} B/client/token "
+          f"measured payload (+{np.mean(header):.1f} B framing) vs "
+          f"{analytic:.1f} B analytic ({comp.name}) vs "
+          f"{cfg.d_model * 4} B uncompressed")
     print("sample:", out[0, :16].tolist())
     return out
 

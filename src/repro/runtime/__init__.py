@@ -1,0 +1,18 @@
+"""Streaming multi-client serving runtime over the packed-payload wire.
+
+Layering (bottom up): `core.wire` frames carry `core.payload.Payload`
+bitstreams over `transport` byte channels; `client` runs the bottom model
+and the encode half, `server` batches decodes and runs the vmapped top
+model against per-session KV caches (`batching` queue, `session`
+accounting, `steps` jit-able halves); `engine.run_streaming` wires N
+clients to one server and reports measured bytes per session.
+"""
+from repro.runtime.batching import BatchingQueue
+from repro.runtime.client import StreamingClient
+from repro.runtime.engine import run_streaming
+from repro.runtime.server import StreamingServer
+from repro.runtime.session import Session, SessionStats
+from repro.runtime.transport import Endpoint, channel_pair
+
+__all__ = ["BatchingQueue", "StreamingClient", "StreamingServer", "Session",
+           "SessionStats", "Endpoint", "channel_pair", "run_streaming"]

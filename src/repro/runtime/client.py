@@ -1,0 +1,74 @@
+"""Streaming client — the feature owner of one serving session.
+
+Runs the bottom model against its own KV cache, compresses each cut
+activation and pulls the payload to host (the `split.protocol.client_encode`
+half, fused into the jitted bottom step), frames it as `core.wire` bytes,
+and blocks on the server's token reply before advancing — the classic
+split-inference loop, one round trip per token. Prompt tokens are prefilled through the same path (the server's top
+model must see them to build its KV), with the replies discarded until the
+prompt is exhausted.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core import wire
+from repro.runtime.session import SessionStats
+
+
+class StreamingClient:
+    """One simulated feature owner driving a session to completion."""
+
+    def __init__(self, session_id: int, params, cache, bottom_step,
+                 endpoint, prompt: np.ndarray, gen: int,
+                 reply_timeout: float = 60.0):
+        self.id = session_id
+        self.params = params
+        self.cache = cache
+        self.bottom_step = bottom_step          # jitted shared per compressor
+        self.endpoint = endpoint
+        self.prompt = np.asarray(prompt, np.int32).reshape(-1)
+        self.gen = gen
+        self.reply_timeout = reply_timeout
+        self.stats = SessionStats()
+        self.generated: list = []
+        self.error: Optional[BaseException] = None
+
+    def run(self) -> None:
+        """Thread target; on any failure records the exception and closes."""
+        try:
+            self._run()
+        except BaseException as e:              # surfaced by the engine
+            self.error = e
+        finally:
+            self.endpoint.send(wire.encode_close_frame(self.id))
+
+    def _run(self) -> None:
+        token = np.asarray([[self.prompt[0]]], np.int32)
+        n_steps = len(self.prompt) + self.gen - 1
+        for step in range(n_steps):
+            payload, self.cache = self.bottom_step(self.params, self.cache,
+                                                   token)
+            payload = jax.tree.map(np.asarray, payload)  # device -> host
+            frame_bytes = wire.encode_payload_frame(self.id, step, payload)
+            self.endpoint.send(frame_bytes)
+            hb = wire.payload_frame_header_nbytes(payload)
+            self.stats.count_up(header_nbytes=hb,
+                                payload_nbytes=len(frame_bytes) - hb)
+
+            reply = self.endpoint.recv_frame(timeout=self.reply_timeout)
+            if reply is None:
+                raise TimeoutError(f"session {self.id}: no reply to frame "
+                                   f"{step} within {self.reply_timeout}s")
+            assert reply.kind == wire.FRAME_TOKENS and reply.session == self.id
+            self.stats.count_down(reply.nbytes)
+            nxt = int(reply.tokens[0])
+            if step + 1 < len(self.prompt):
+                token = np.asarray([[self.prompt[step + 1]]], np.int32)
+            else:
+                self.generated.append(nxt)
+                self.stats.tokens_out += 1
+                token = np.asarray([[nxt]], np.int32)

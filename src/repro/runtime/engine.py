@@ -1,0 +1,123 @@
+"""Orchestration: build a server + N streaming clients and run the sessions.
+
+This is the simulation harness `launch/serve.py`, `benchmarks/
+serve_throughput.py`, and `examples/streaming_clients.py` drive: everything
+crosses real framed byte channels, compression is applied per client (a
+mixed compressor population is supported), and the result carries both
+parties' byte accounting so callers can cross-check measured wire sizes
+against the Table-2 analytics.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core import compressors
+from repro.models import transformer
+from repro.models.config import ArchConfig, Runtime
+from repro.runtime import steps
+from repro.runtime.client import StreamingClient
+from repro.runtime.server import StreamingServer
+from repro.runtime.transport import channel_pair
+from repro.split import protocol
+
+
+def _client_compressors(cfg: ArchConfig, n_clients: int,
+                        mix: Optional[Sequence] = None) -> List:
+    """Per-client compressor objects: an explicit mix (spec strings or
+    Compressor objects, assigned round-robin) or the config's compressor."""
+    if mix is None:
+        base = (protocol.make_cut_compressor(cfg.split) if cfg.split
+                else compressors.Compressor())
+        return [base] * n_clients
+    objs = [compressors.make_compressor(m) if isinstance(m, str) else m
+            for m in mix]
+    return [objs[i % len(objs)] for i in range(n_clients)]
+
+
+def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
+                  gen: int = 8, max_batch: Optional[int] = None,
+                  max_wait: float = 0.01, compressor_mix=None, seed: int = 0,
+                  params=None) -> dict:
+    """Serve `n_clients` concurrent sessions of `prompt_len + gen` tokens.
+
+    Returns a dict with the generated tokens `(n_clients, gen)`, per-session
+    client/server stats dicts, the per-client compressor names, the server's
+    batch-fill history, and wall-clock throughput.
+    """
+    rt = Runtime(mesh=None, training=False)
+    cut = (cfg.split.cut_layer if cfg.split and cfg.split.cut_layer > 0
+           else max(1, cfg.n_layers // 2))
+    assert 0 < cut < cfg.n_layers
+    if params is None:
+        params = transformer.init_model(jax.random.key(seed), cfg)
+    max_batch = max_batch or min(8, n_clients)
+    max_len = prompt_len + gen
+    comps = _client_compressors(cfg, n_clients, compressor_mix)
+
+    # one jitted bottom step per distinct compressor (frozen -> hashable)
+    bottom_steps = {c: jax.jit(steps.make_bottom_step(cfg, rt, cut, c))
+                    for c in dict.fromkeys(comps)}
+    make_cache = lambda: transformer.init_cache(params, cfg, rt, 1, max_len)
+    server = StreamingServer(params, steps.make_top_step(cfg, rt, cut),
+                             make_cache, max_batch=max_batch,
+                             max_wait=max_wait, dtype=cfg.adtype())
+
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(seed + 1), (n_clients, prompt_len), 0, cfg.vocab))
+
+    clients: List[StreamingClient] = []
+    for cid in range(n_clients):
+        cep, sep = channel_pair()
+        server.attach(sep)
+        clients.append(StreamingClient(
+            cid, params, make_cache(), bottom_steps[comps[cid]], cep,
+            prompts[cid], gen))
+
+    # warm both steps up BEFORE spawning threads: one compile, not a storm
+    tok0 = np.zeros((1, 1), np.int32)
+    dummy = {c: step(params, make_cache(), tok0)
+             for c, step in bottom_steps.items()}
+    x0, cache0 = next(iter(dummy.values()))
+    x0 = np.asarray(protocol.server_decode(
+        jax.tree.map(np.asarray, x0), dtype=cfg.adtype()))
+    server.top_step(params, jax.numpy.asarray(
+        np.stack([x0] * max_batch)),
+        jax.tree.map(lambda *a: jax.numpy.stack(a), *([cache0] * max_batch)))
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=c.run, daemon=True) for c in clients]
+    for t in threads:
+        t.start()
+    server.serve_loop()
+    for t in threads:
+        t.join(timeout=120)
+    wall = time.perf_counter() - t0
+
+    if server.errors:
+        raise RuntimeError(
+            f"server reader threads failed: {server.errors}") \
+            from server.errors[0]
+    errs = [(c.id, c.error) for c in clients if c.error is not None]
+    if errs:
+        raise RuntimeError(f"client sessions failed: {errs}") from errs[0][1]
+
+    tokens = np.asarray([c.generated for c in clients], np.int32)
+    return {
+        "tokens": tokens,
+        "client_stats": [c.stats.as_dict() for c in clients],
+        "server_stats": [server.sessions[c.id].stats.as_dict()
+                         for c in clients],
+        "compressors": [c.name for c in comps],
+        "compressor_objs": comps,
+        "batch_sizes": server.batch_sizes,
+        "wall_s": wall,
+        "tokens_per_s": tokens.size / max(wall, 1e-9),
+        "n_clients": n_clients,
+        "max_batch": max_batch,
+        "cut_layer": cut,
+    }

@@ -1,0 +1,134 @@
+"""Streaming server — the label owner serving N concurrent sessions.
+
+One reader thread per connection parses `core.wire` frames off the byte
+transport and feeds a `BatchingQueue`; the single serve loop flushes the
+queue under the max-batch/max-wait policy, decodes each payload *batch* once
+(grouped by payload meta, so a mixed dense/randtopk client population still
+gets batched decodes), and runs one vmapped top-model step over the whole
+flush — every session row against its own KV cache and position. Token
+replies stream back as frames; per-session byte accounting is taken from the
+real frame sizes at receipt.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import wire
+from repro.core.payload import Payload
+from repro.runtime.batching import BatchingQueue
+from repro.runtime.session import Session
+from repro.split import protocol
+
+
+class StreamingServer:
+    """Top-model serving engine over framed byte channels."""
+
+    def __init__(self, params, top_step: Callable, make_cache: Callable,
+                 *, max_batch: int = 8, max_wait: float = 0.01,
+                 dtype=jnp.float32):
+        self.params = params
+        self.top_step = jax.jit(top_step)
+        self.make_cache = make_cache        # () -> fresh batch-1 cache pytree
+        self.dtype = dtype
+        self.queue = BatchingQueue(max_batch, max_wait)
+        self.sessions: Dict[int, Session] = {}
+        self.batch_sizes: List[int] = []    # flush fill history
+        self._lock = threading.Lock()
+        self._readers: List[threading.Thread] = []
+        self._open_readers = 0
+        self.errors: List[BaseException] = []   # reader-thread failures
+
+    # -- connection handling -------------------------------------------------
+
+    def attach(self, endpoint) -> threading.Thread:
+        """Register a client channel and start its frame-reader thread."""
+        with self._lock:
+            self._open_readers += 1
+        t = threading.Thread(target=self._read_loop, args=(endpoint,),
+                             daemon=True)
+        self._readers.append(t)
+        t.start()
+        return t
+
+    def _read_loop(self, endpoint) -> None:
+        try:
+            while True:
+                frame = endpoint.recv_frame(timeout=0.1)
+                if frame is None:
+                    continue
+                if frame.kind == wire.FRAME_CLOSE:
+                    with self._lock:
+                        if frame.session in self.sessions:
+                            self.sessions[frame.session].closed = True
+                    return
+                assert frame.kind == wire.FRAME_PAYLOAD, frame.kind
+                sess = self._session_for(frame.session, endpoint)
+                sess.stats.count_up(frame.header_nbytes, frame.payload_nbytes)
+                self.queue.put((sess, frame))
+        except BaseException as e:      # surfaced by engine.run_streaming
+            with self._lock:
+                self.errors.append(e)
+        finally:
+            with self._lock:
+                self._open_readers -= 1
+                last = self._open_readers == 0
+            if last:
+                self.queue.close()          # serve loop drains, then exits
+
+    def _session_for(self, sid: int, endpoint) -> Session:
+        with self._lock:
+            sess = self.sessions.get(sid)
+            if sess is None:
+                sess = Session(id=sid, cache=self.make_cache(),
+                               endpoint=endpoint)
+                self.sessions[sid] = sess
+            return sess
+
+    # -- serving -------------------------------------------------------------
+
+    def serve_loop(self) -> None:
+        """Flush/process until every connection has closed and drained."""
+        while True:
+            batch = self.queue.get_batch(idle_timeout=0.05)
+            if batch:
+                self._process(batch)
+            elif self.queue.drained:
+                return
+
+    def _process(self, items) -> None:
+        self.batch_sizes.append(len(items))
+        xs: List = [None] * len(items)
+        by_meta: Dict = {}
+        for i, (_, frame) in enumerate(items):
+            by_meta.setdefault(frame.payload.meta, []).append(i)
+        # decode each payload batch ONCE: stack wire leaves across sessions
+        for meta, idxs in by_meta.items():
+            leaves = {
+                name: np.stack(
+                    [getattr(items[i][1].payload, name) for i in idxs])
+                for name, _ in items[idxs[0]][1].payload.wire_leaves()}
+            stacked = Payload(meta=meta, **leaves)
+            dense = np.asarray(protocol.server_decode(stacked,
+                                                      dtype=self.dtype))
+            for row, i in enumerate(idxs):
+                xs[i] = dense[row]
+        # pad the flush to max_batch so the vmapped step compiles once
+        pad = self.queue.max_batch - len(items)
+        caches = [sess.cache for sess, _ in items] + \
+                 [items[0][0].cache] * pad
+        xs = xs + [xs[0]] * pad
+        cache_stack = jax.tree.map(lambda *a: jnp.stack(a), *caches)
+        tokens, new_caches = self.top_step(self.params, jnp.asarray(
+            np.stack(xs)), cache_stack)
+        tokens = np.asarray(tokens)
+        for i, (sess, _) in enumerate(items):
+            sess.cache = jax.tree.map(lambda a, i=i: a[i], new_caches)
+            reply = wire.encode_token_frame(sess.id, sess.seq, tokens[i])
+            sess.seq += 1
+            sess.endpoint.send(reply)
+            sess.stats.count_down(len(reply))

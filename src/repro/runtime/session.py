@@ -1,0 +1,69 @@
+"""Per-session state: KV-cache slot + byte accounting from real frames.
+
+`SessionStats` is the measured counterpart of the Table-2 formulas: every
+counter is incremented from the `len()` of bytes that actually crossed the
+transport, split into payload bytes (the codec's bitstream — what the paper's
+compressed sizes describe) and framing bytes (length prefix + headers, a
+fixed per-frame cost the analytic rows do not model). Benchmarks compare
+`payload_bytes_up / frames_up` against `core.wire` analytic predictions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+@dataclasses.dataclass
+class SessionStats:
+    """Byte/token accounting for one client session (both parties keep one
+    and tests assert they agree)."""
+
+    frames_up: int = 0          # payload frames sent client -> server
+    payload_bytes_up: int = 0   # codec bitstream bytes only
+    header_bytes_up: int = 0    # framing overhead (length prefix + headers)
+    frames_down: int = 0        # token frames server -> client
+    bytes_down: int = 0         # total token-frame bytes
+    tokens_out: int = 0         # tokens the client kept (generated, not prompt)
+
+    @property
+    def bytes_up(self) -> int:
+        return self.payload_bytes_up + self.header_bytes_up
+
+    @property
+    def payload_bytes_per_frame(self) -> float:
+        return self.payload_bytes_up / max(1, self.frames_up)
+
+    def count_up(self, header_nbytes: int, payload_nbytes: int) -> None:
+        self.frames_up += 1
+        self.header_bytes_up += header_nbytes
+        self.payload_bytes_up += payload_nbytes
+
+    def count_down(self, nbytes: int) -> None:
+        self.frames_down += 1
+        self.bytes_down += nbytes
+
+    def as_dict(self) -> dict:
+        return dict(frames_up=self.frames_up,
+                    payload_bytes_up=self.payload_bytes_up,
+                    header_bytes_up=self.header_bytes_up,
+                    frames_down=self.frames_down,
+                    bytes_down=self.bytes_down,
+                    tokens_out=self.tokens_out)
+
+
+@dataclasses.dataclass
+class Session:
+    """Server-side view of one client: its top-model cache + accounting.
+
+    `cache` is a full `transformer.init_cache(batch=1)` pytree of which only
+    the top-layer slice is ever read or written by the serving step; `pos`
+    lives inside it, so sessions at different depths batch together (the top
+    step is vmapped over sessions, giving each row its own positions).
+    """
+
+    id: int
+    cache: Any
+    endpoint: Any = None                # server->client reply half
+    stats: SessionStats = dataclasses.field(default_factory=SessionStats)
+    seq: int = 0                        # next reply sequence number
+    closed: bool = False

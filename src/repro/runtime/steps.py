@@ -1,0 +1,72 @@
+"""jit-able client/server decode steps for the streaming runtime.
+
+The split model's decode caches are stacked per layer (axis 0) and the cut
+partitions every cache entry into a bottom prefix and a top suffix along
+that axis (the same invariant `split.model.decode_step`'s merge relies on),
+so each party updates only its own slice of a full-shaped cache:
+
+  * client (feature owner): embed -> layers [0, cut) -> `Compressor.encode`;
+    writes the prefix slice.
+  * server (label owner): dense cut view -> layers [cut, L) -> lm head ->
+    greedy token; writes the suffix slice. The server step is vmapped over a
+    leading session axis so one compiled step serves a whole batch of
+    sessions, each row with its own cache and position.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compressors
+from repro.models import transformer
+from repro.models.config import ArchConfig, Runtime
+
+
+def _merge_range(cache, partial, *, prefix: bool):
+    """Write a contiguous layer-range partial cache back into the full one.
+
+    `partial` covers the first (prefix=True) or last (prefix=False) entries
+    of each cache key along the stacked layer axis; untouched keys (e.g.
+    frozen cross-attention KV) pass through. Advances `pos`.
+    """
+    new = dict(cache)
+    for key, val in partial.items():
+        def m(o, p):
+            if prefix:
+                return jnp.concatenate([p, o[p.shape[0]:]], axis=0)
+            return jnp.concatenate([o[: o.shape[0] - p.shape[0]], p], axis=0)
+        new[key] = jax.tree.map(m, cache[key], val)
+    new["pos"] = cache["pos"] + 1
+    return new
+
+
+def make_bottom_step(cfg: ArchConfig, rt: Runtime, cut: int,
+                     comp: compressors.Compressor) -> Callable:
+    """(params, cache, token (1,1) i32) -> (Payload, new cache). jit-able;
+    encode is deterministic (inference-mode compression, RandTopk -> TopK)."""
+
+    def bottom_step(params, cache, token):
+        x = transformer.embed(params, cfg, rt, token)
+        x, partial = transformer.decode_layers(params, cfg, rt, x, cache,
+                                               0, cut)
+        payload = comp.encode(x, training=False)
+        return payload, _merge_range(cache, partial, prefix=True)
+
+    return bottom_step
+
+
+def make_top_step(cfg: ArchConfig, rt: Runtime, cut: int) -> Callable:
+    """Vmapped server step: (params, x (S,1,1,d), caches stacked over S) ->
+    (tokens (S,1) i32, new caches). One compile serves every batch; padded
+    rows (batch fill) are computed and discarded."""
+
+    def one_session(params, x, cache):
+        x, partial = transformer.decode_layers(params, cfg, rt, x, cache,
+                                               cut, cfg.n_layers)
+        logits = transformer.lm_head(params, cfg, rt, x)
+        tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return tok, _merge_range(cache, partial, prefix=False)
+
+    return jax.vmap(one_session, in_axes=(None, 0, 0))

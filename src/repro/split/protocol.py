@@ -1,34 +1,20 @@
 """Cut-layer transfer protocol — one generic encode/transfer/decode path.
 
-Maps the split-learning party-to-party socket onto the TPU fabric: the two
-parties are the two pods of the production mesh, and the compressed payload
-crosses the pod boundary with a `ppermute` along the 'pod' axis inside
-`shard_map` (the TPU-native point-to-point send).
+Two entry points, one codec:
 
-Placement is *symmetrized SPMD split learning*: the batch is sharded over
-('pod', 'data'), so each pod acts as feature owner for its half of the batch
-and as label owner for the other half — every sample's cut activation crosses
-the pod boundary exactly once per direction, so pod-boundary traffic per
-sample is identical to classic two-party SL while keeping both pods busy
-(bidirectional split learning).
+  * `cut_boundary` — the fused in-graph path (encode -> ppermute the payload
+    leaves across the 'pod' mesh axis -> decode), used by `split.model`
+    inside jit, with the payload-typed backward wire attached via custom VJP.
+  * `client_encode` / `server_decode` — the same two halves exposed for
+    out-of-process use: a feature owner that holds only the bottom model
+    encodes its cut activation to a host-side `Payload` (ready for
+    `core.wire.encode_payload_frame`), and a label owner decodes a received
+    payload to the dense view without ever seeing the compressor object.
+    `repro.runtime`'s streaming client/server is built on these halves.
 
-The transfer is payload-typed: `cut_boundary` calls `Compressor.encode`,
-ppermutes every wire leaf of the resulting `core.payload.Payload` (so
-quantization moves uint8 codes + a 2-float header per token — not the dense
-dequantized tensor), and `Compressor.decode`s on the far side. There are no
-per-compressor branches; the payload's static `meta.kind` drives both the
-forward transfer and the backward gradient routing:
-
-  forward wire   = payload leaves            (Table 2 'Compressed size fwd')
-  backward wire  = k masked gradient floats for sparse/slice kinds (the
-                   feature owner already holds the indices), the dense
-                   gradient for dense/quant kinds (STE through the
-                   quantizer)                (Table 2 'Compressed size bwd')
-
-realized with a custom VJP whose backward rule ppermutes exactly those
-leaves back. On a single-pod mesh (or no mesh) the transfer is the identity
-— parties are co-located and the savings show up as reduced cut-boundary
-tensor bytes only.
+Placement, the symmetrized-SPMD mapping of the two parties onto the two
+pods, and the forward/backward wire-size rules (Table 2) are specified in
+docs/protocol.md — the normative companion of this module.
 """
 from __future__ import annotations
 
@@ -156,6 +142,36 @@ def _transport(comp: compressors.Compressor, x, rt: Runtime, key,
     return run(x)
 
 
+# ---------------------------------------------------------------------------
+# Out-of-process halves — the wire interface for parties that are NOT in the
+# same jit program (streaming clients/servers, real sockets).
+# ---------------------------------------------------------------------------
+
+def client_encode(comp: compressors.Compressor, x, *, key=None,
+                  training: bool = False) -> Payload:
+    """Feature-owner half: compress a cut activation to a host Payload.
+
+    Returns the payload with numpy leaves, ready to be framed by
+    `core.wire.encode_payload_frame` and put on a socket. The device-side
+    `comp.encode` may be jitted by the caller; this helper just pulls the
+    leaves to host afterwards.
+    """
+    import numpy as np
+
+    p = comp.encode(x, key=key, training=training)
+    return jax.tree.map(np.asarray, p)
+
+
+def server_decode(p: Payload, *, dtype=None):
+    """Label-owner half: dense (..., d) view of a received payload.
+
+    Dispatches on `p.meta.kind` only (`compressors.payload_to_dense`) — the
+    server needs no compressor object and no per-session codec state; the
+    frame's subheader fully describes the payload.
+    """
+    return compressors.payload_to_dense(p, dtype=dtype)
+
+
 def cut_boundary(x, cfg: ArchConfig, rt: Runtime, key) -> tuple:
     """Compress the cut activation (B, S, d), move the packed payload across
     the pod boundary, decode on the far side. Returns (x_top, l1_penalty).
@@ -189,8 +205,6 @@ def measured_payload_bytes(cfg: ArchConfig, batch: int, seq: int,
     actually encoding a probe activation and serializing it with
     `wire.encode_payload` — the codec-side cross-check of
     `wire_bytes_per_step`'s analytic formula."""
-    import numpy as np
-
     from repro.core import wire
 
     sc = cfg.split
@@ -198,5 +212,5 @@ def measured_payload_bytes(cfg: ArchConfig, batch: int, seq: int,
         return 0
     comp = make_cut_compressor(sc)
     probe = jax.random.normal(jax.random.key(0), (batch, seq, cfg.d_model))
-    p = comp.encode(probe, key=key, training=training)
-    return wire.payload_nbytes(jax.tree.map(np.asarray, p))
+    return wire.payload_nbytes(client_encode(comp, probe, key=key,
+                                             training=training))

@@ -27,3 +27,10 @@ def test_quickstart_example():
 def test_two_party_vfl_example():
     out = _run_example("examples/two_party_vfl.py")
     assert "randtopk" in out and "size_reduction" in out
+
+
+@pytest.mark.slow
+def test_streaming_clients_example():
+    out = _run_example("examples/streaming_clients.py")
+    assert "identity" in out and "randtopk" in out
+    assert "tok/s" in out

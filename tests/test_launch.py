@@ -60,11 +60,16 @@ def test_train_driver_restores_checkpoint(tmp_path):
 
 def test_serve_driver(capsys):
     _run("""
+        import io, contextlib
         from repro.launch.serve import main
-        out = main(["--arch", "granite-moe-1b-a400m", "--smoke",
-                    "--batch", "2", "--prompt-len", "4", "--gen", "6",
-                    "--split", "topk", "--k", "8"])
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            out = main(["--arch", "granite-moe-1b-a400m", "--smoke",
+                        "--batch", "2", "--prompt-len", "4", "--gen", "6",
+                        "--split", "topk", "--k", "8"])
         assert out.shape == (2, 6)
+        # measured bytes/client/token come from real frames now
+        assert "B/client/token" in buf.getvalue(), buf.getvalue()
         print("SERVE OK")
     """, device_count=1)
 

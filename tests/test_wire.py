@@ -1,9 +1,15 @@
-"""Byte-exact wire format round-trips + property tests."""
+"""Byte-exact wire format round-trips + property tests + frame layer."""
+import doctest
+import pathlib
+
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core import wire
+import jax
+from repro.core import compressors as C, wire
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
 @given(st.integers(2, 2048), st.integers(1, 16), st.integers(0, 1000))
@@ -52,3 +58,101 @@ def test_bytes_per_step():
     assert b_train > b_inf > 0
     ident = wire.bytes_per_step("identity", 128, 10, training=False)
     assert ident == 128 * 4 * 10
+
+
+# ---------------------------------------------------------------------------
+# Frame layer (docs/wire-format.md is the normative spec)
+# ---------------------------------------------------------------------------
+
+ALL_COMPRESSORS = [("identity", {}), ("size_reduction", dict(k=5)),
+                   ("topk", dict(k=5)), ("randtopk", dict(k=5, alpha=0.2)),
+                   ("quant", dict(bits=4)),
+                   ("randtopk_quant", dict(k=5, bits=8)), ("l1", {})]
+
+
+@pytest.mark.parametrize("name,kw", ALL_COMPRESSORS)
+def test_payload_frame_roundtrip_all_kinds(name, kw):
+    """header + payload bytes -> decode -> exact array equality, per kind."""
+    d = 48
+    comp = C.make_compressor(name, **kw)
+    x = jax.numpy.asarray(
+        np.random.RandomState(7).randn(2, 3, d).astype(np.float32))
+    p = jax.tree.map(np.asarray,
+                     comp.encode(x, key=jax.random.key(0), training=True))
+    buf = wire.encode_payload_frame(session=11, seq=4, p=p)
+    frame, consumed = wire.decode_frame(buf)
+    assert consumed == len(buf) == frame.nbytes
+    assert (frame.kind, frame.session, frame.seq) == (wire.FRAME_PAYLOAD,
+                                                      11, 4)
+    assert frame.payload.meta == p.meta
+    assert frame.payload_nbytes == wire.payload_nbytes(p)
+    for (name_a, a), (name_b, b) in zip(p.wire_leaves(),
+                                        frame.payload.wire_leaves()):
+        assert name_a == name_b
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_token_and_close_frames():
+    buf = wire.encode_token_frame(3, 9, [42, 7]) + wire.encode_close_frame(3)
+    f1, off = wire.decode_frame(buf)
+    f2, off2 = wire.decode_frame(buf, off)
+    assert off2 == len(buf)
+    assert f1.kind == wire.FRAME_TOKENS and f1.tokens.tolist() == [42, 7]
+    assert f1.payload_nbytes == 8 and f1.nbytes + f2.nbytes == len(buf)
+    assert f2.kind == wire.FRAME_CLOSE and f2.session == 3
+
+
+def test_frame_reader_arbitrary_chunks():
+    """Reassembly must not depend on chunk boundaries (1-byte feeds)."""
+    p = C.make_compressor("topk", k=2).encode(
+        jax.numpy.asarray(np.random.RandomState(0).randn(1, 8).astype(
+            np.float32)))
+    stream = (wire.encode_payload_frame(0, 0, jax.tree.map(np.asarray, p))
+              + wire.encode_token_frame(0, 1, [5])
+              + wire.encode_close_frame(0))
+    reader = wire.FrameReader()
+    got = []
+    for i in range(len(stream)):
+        reader.feed(stream[i:i + 1])
+        got.extend(reader.frames())
+    assert [f.kind for f in got] == [wire.FRAME_PAYLOAD, wire.FRAME_TOKENS,
+                                     wire.FRAME_CLOSE]
+
+
+def test_frame_reader_abandoned_iterator_does_not_replay():
+    """Consuming one frame and dropping the iterator must not re-yield it."""
+    reader = wire.FrameReader()
+    reader.feed(wire.encode_token_frame(0, 0, [1])
+                + wire.encode_token_frame(0, 1, [2]))
+    first = next(reader.frames())        # iterator abandoned mid-stream
+    assert first.seq == 0
+    assert [f.seq for f in reader.frames()] == [1]
+
+
+def test_token_frame_count_validated():
+    buf = bytearray(wire.encode_token_frame(0, 0, [1, 2]))
+    buf[wire.FRAME_HEAD_NBYTES] = 200    # corrupt the count field
+    with pytest.raises(ValueError, match="count"):
+        wire.decode_frame(bytes(buf))
+
+
+def test_decode_frame_incomplete_returns_none():
+    buf = wire.encode_token_frame(0, 0, [1])
+    for cut in (0, 3, len(buf) - 1):
+        assert wire.decode_frame(buf[:cut]) is None
+
+
+def test_frame_rejects_unknown_version():
+    buf = bytearray(wire.encode_close_frame(1))
+    buf[4] = 99  # version byte
+    with pytest.raises(ValueError, match="version"):
+        wire.decode_frame(bytes(buf))
+
+
+def test_wire_format_doc_examples():
+    """docs/wire-format.md's examples are executable and must stay true."""
+    failures, n = doctest.testfile(str(ROOT / "docs" / "wire-format.md"),
+                                   module_relative=False,
+                                   optionflags=doctest.NORMALIZE_WHITESPACE)
+    assert n > 0 and failures == 0
