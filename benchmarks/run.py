@@ -25,7 +25,8 @@ def main() -> None:
         os.environ.setdefault("REPRO_BENCH_SEEDS", "1")
 
     from benchmarks import (alpha_sweep, appendixB_privacy,
-                            combined_compression, error_feedback, fig2_toy,
+                            combined_compression, error_feedback,
+                            fedtrain_convergence, fig2_toy,
                             fig4_convergence, fig5_distribution,
                             roofline_report, serve_throughput, table2_sizes,
                             table3_accuracy, table7_dbpedia_geometry,
@@ -45,6 +46,7 @@ def main() -> None:
         "roofline": roofline_report.main,
         "wire": wire_packing.main,
         "serve": serve_throughput.main,
+        "fedtrain": fedtrain_convergence.main,
     }
     chosen = (args.only.split(",") if args.only else list(sections))
 

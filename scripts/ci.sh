@@ -13,4 +13,9 @@ python scripts/check_docs.py
 # match the Table-2 analytics within 5% (writes BENCH_serve.json)
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/serve_throughput.py --smoke
 
+# fedtrain smoke: over-the-wire split training; randtopk bytes must match
+# the Table-2 fwd+bwd analytics, adaptive-k and async must hold
+# accuracy-per-measured-byte >= fixed-k topk
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/fedtrain_convergence.py --smoke
+
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

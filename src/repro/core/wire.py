@@ -19,9 +19,12 @@ On top of the bare payload bitstream sits a length-prefixed *frame* layer
 streaming session actually sends. A frame carries a session id, a sequence
 number, and either a self-describing payload (kind / d / k / bits /
 batch shape — everything `decode_payload` needs, so the receiver holds no
-per-connection state) or a token reply / close marker. `repro.runtime` builds
-the multi-client serving loop on these frames; the normative layout spec
-(with executable examples) lives in docs/wire-format.md.
+per-connection state), a token reply / close marker, or — in the training
+direction — a `grad` frame carrying the compressed cut gradient as another
+self-described payload plus the scalar step loss. `repro.runtime` builds
+the multi-client serving loop and `repro.fedtrain` the split-training loop
+on these frames; the normative layout spec (with executable examples) lives
+in docs/wire-format.md.
 """
 from __future__ import annotations
 
@@ -232,12 +235,14 @@ WIRE_VERSION = 1
 FRAME_PAYLOAD = 1   # client -> server: one compressed cut activation
 FRAME_TOKENS = 2    # server -> client: greedy-decoded next token(s)
 FRAME_CLOSE = 3     # either direction: end of session
+FRAME_GRAD = 4      # server -> client: compressed cut gradient + step loss
 
 # <u32 body_len> <u8 version> <u8 frame_kind> <u32 session> <u32 seq>
 _FRAME_HEAD = struct.Struct("<IBBII")
 # payload-frame subheader: <u8 kind_idx> <u32 d> <u32 k> <u8 bits> <u8 ndim>
 _PAYLOAD_HEAD = struct.Struct("<BIIBB")
 _TOKENS_HEAD = struct.Struct("<I")       # <u32 count>, then count x i32
+_GRAD_TAIL = struct.Struct("<f")         # <f32 loss> closing a grad subheader
 
 #: fixed per-frame byte overhead before any payload/token body
 FRAME_HEAD_NBYTES = _FRAME_HEAD.size
@@ -258,8 +263,9 @@ class Frame:
     kind: int
     session: int
     seq: int
-    payload: Optional[Payload] = None       # FRAME_PAYLOAD
+    payload: Optional[Payload] = None       # FRAME_PAYLOAD / FRAME_GRAD
     tokens: Optional[np.ndarray] = None     # FRAME_TOKENS, int32
+    loss: Optional[float] = None            # FRAME_GRAD, training step loss
     header_nbytes: int = 0
     payload_nbytes: int = 0
 
@@ -281,14 +287,40 @@ def payload_frame_header_nbytes(p: Payload) -> int:
     return _FRAME_HEAD.size + _PAYLOAD_HEAD.size + 4 * len(p.batch_shape)
 
 
-def encode_payload_frame(session: int, seq: int, p: Payload) -> bytes:
-    """Frame a payload: self-describing subheader + `encode_payload` bytes."""
+def _payload_subheader(p: Payload) -> bytes:
     m = p.meta
     bshape = p.batch_shape
     sub = _PAYLOAD_HEAD.pack(KINDS.index(m.kind), m.d, m.k, m.bits,
                              len(bshape))
-    sub += struct.pack(f"<{len(bshape)}I", *bshape) if bshape else b""
-    return _frame(FRAME_PAYLOAD, session, seq, sub + encode_payload(p))
+    return sub + (struct.pack(f"<{len(bshape)}I", *bshape) if bshape else b"")
+
+
+def encode_payload_frame(session: int, seq: int, p: Payload) -> bytes:
+    """Frame a payload: self-describing subheader + `encode_payload` bytes."""
+    return _frame(FRAME_PAYLOAD, session, seq,
+                  _payload_subheader(p) + encode_payload(p))
+
+
+def grad_frame_header_nbytes(p: Payload) -> int:
+    """Framing bytes of `encode_grad_frame(p)` — the payload-frame header
+    plus the f32 loss the training reply carries."""
+    return payload_frame_header_nbytes(p) + _GRAD_TAIL.size
+
+
+def encode_grad_frame(session: int, seq: int, p: Payload,
+                      loss: float = 0.0) -> bytes:
+    """Frame a backward cut-gradient payload (training direction).
+
+    The subheader mirrors the payload frame (the gradient is itself a
+    `Payload` — `slice` of k floats for sparse forward kinds, `dense`
+    otherwise, per Table 2 bwd), followed by one f32 `loss`: the label
+    owner's scalar step loss, which the feature owner needs for logging and
+    adaptive-k scheduling. The loss is framing metadata, not codec
+    bitstream — byte accounting keeps it out of `payload_nbytes`.
+    """
+    return _frame(FRAME_GRAD, session, seq,
+                  _payload_subheader(p) + _GRAD_TAIL.pack(loss)
+                  + encode_payload(p))
 
 
 def encode_token_frame(session: int, seq: int, tokens) -> bytes:
@@ -317,14 +349,18 @@ def decode_frame(buf, offset: int = 0) -> Optional[Tuple[Frame, int]]:
     if version != WIRE_VERSION:
         raise ValueError(f"wire version {version}, expected {WIRE_VERSION}")
     pos = offset + _FRAME_HEAD.size
-    if kind == FRAME_PAYLOAD:
+    if kind in (FRAME_PAYLOAD, FRAME_GRAD):
         kind_idx, d, k, bits, ndim = _PAYLOAD_HEAD.unpack_from(buf, pos)
         pos += _PAYLOAD_HEAD.size
         bshape = struct.unpack_from(f"<{ndim}I", buf, pos) if ndim else ()
         pos += 4 * ndim
+        loss = None
+        if kind == FRAME_GRAD:
+            (loss,) = _GRAD_TAIL.unpack_from(buf, pos)
+            pos += _GRAD_TAIL.size
         meta = PayloadMeta(KINDS[kind_idx], d=d, k=k, bits=bits)
         payload = decode_payload(buf[pos:end], meta, bshape)
-        return (Frame(kind, session, seq, payload=payload,
+        return (Frame(kind, session, seq, payload=payload, loss=loss,
                       header_nbytes=pos - offset,
                       payload_nbytes=end - pos), end)
     if kind == FRAME_TOKENS:

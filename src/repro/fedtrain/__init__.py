@@ -1,0 +1,22 @@
+"""Federated split-training runtime — the training direction over the wire.
+
+The serving runtime (`repro.runtime`) moves compressed activations up and
+tokens down; this package closes the paper's actual loop: activations up,
+compressed cut **gradients** down (`core.wire` `grad` frames), with the
+party boundary realized as an explicit `jax.vjp` on each side. Layering:
+`client` runs bottom models + the `split.protocol` encode half and applies
+returned gradients; `server` batches via `runtime.batching`, runs top model
++ loss, and streams grad frames back; `schedule` adapts per-step (k, bits)
+to training progress (Oh et al. 2023); `async_policy` trades staleness for
+communication (Chen et al. 2021); `engine.run_fedtrain` orchestrates,
+checkpoints every party through `checkpoint.store`, and accounts both
+directions' bytes from real frames.
+"""
+from repro.fedtrain.async_policy import AsyncPolicy
+from repro.fedtrain.client import TrainingClient
+from repro.fedtrain.engine import run_fedtrain
+from repro.fedtrain.schedule import KScheduler, ScheduleSpec
+from repro.fedtrain.server import TrainingServer
+
+__all__ = ["AsyncPolicy", "KScheduler", "ScheduleSpec", "TrainingClient",
+           "TrainingServer", "run_fedtrain"]

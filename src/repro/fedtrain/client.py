@@ -1,0 +1,247 @@
+"""Feature-owner training client — the paper's bottom-model party, live.
+
+One `TrainingClient` owns a shard of the training features, its bottom
+model, and its optimizer. Each step it runs the bottom forward, compresses
+the cut activation through `split.protocol.client_encode` (the same half
+the serving runtime uses), frames it as `core.wire` bytes, and — on sync
+steps — blocks for the server's `grad` frame, decodes the compressed cut
+gradient back onto the forward support (`protocol.client_grad_decode`), and
+pulls it through the bottom VJP. The wire is byte-literal in both
+directions: every counter in `self.stats` is the length of a real framed
+byte string.
+
+Policies plug in at two points:
+
+  * `KScheduler` (schedule.py) picks the per-sync-step (k, bits); the
+    resulting compressor object keys a small jit cache, and the server needs
+    no notice because frames are self-describing.
+  * `AsyncPolicy` (async_policy.py) decides which steps sync at all; local
+    steps train against the cached stale gradient and never touch the wire.
+
+Optional error feedback keeps a per-client mean-residual vector `e in R^d`
+(the batch mean of what compression dropped), added to the next batch's
+activations pre-encode — the weakest-state SL analogue of EF memory; the
+honest caveats live in docs/beyond-paper.md. All trainer state (params,
+optimizer moments, PRNG key, EF residual, stale gradient, schedule state,
+byte counters) round-trips through `state()`/`load_state` for
+`checkpoint.store`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compressors as C, wire
+from repro.fedtrain.async_policy import AsyncPolicy
+from repro.fedtrain.schedule import KScheduler
+from repro.optim import adamw_init, adamw_update
+from repro.runtime.session import SessionStats
+from repro.split import protocol, tabular
+
+
+class TrainingClient:
+    """One feature owner driving its training shard over the wire."""
+
+    def __init__(self, cid: int, spec: tabular.SplitSpec, x_shard: np.ndarray,
+                 batch_ids: List[np.ndarray], endpoint, *, seed: int,
+                 scheduler: Optional[KScheduler] = None,
+                 policy: Optional[AsyncPolicy] = None, ef: bool = False,
+                 barrier=None, ckpt_every: int = 0,
+                 reply_timeout: float = 120.0):
+        self.id = cid
+        self.spec = spec
+        self.x = np.asarray(x_shard, np.float32)
+        self.batch_ids = batch_ids          # one index array per local step
+        self.endpoint = endpoint
+        self.scheduler = scheduler
+        self.policy = policy or AsyncPolicy()
+        self.ef = ef
+        self.barrier = barrier
+        self.ckpt_every = ckpt_every
+        self.reply_timeout = reply_timeout
+
+        self.start_step = 0
+        self.end_step = len(batch_ids)
+        self.stats = SessionStats()
+        self.losses: list = []              # (step, loss) at sync steps
+        self.k_trace: list = []             # (step, k, bits) at sync steps
+        self.sync_count = 0                 # schedule clock (survives resume)
+        self.analytic_up = 0.0              # compressor-accounting bytes
+        self.analytic_down = 0.0
+        self.error: Optional[BaseException] = None
+
+        # same chain as split.tabular.train: init consumes key(seed), the
+        # per-step subkeys split off the same root (N=1 parity is exact)
+        key = jax.random.key(seed)
+        self.bottom, _ = tabular.init_parties(key, spec)
+        self.opt = adamw_init(self.bottom)
+        self._key = key
+
+        batch = len(batch_ids[0]) if batch_ids else 0
+        self._stale = np.zeros((batch, spec.cut_dim), np.float32)
+        self._has_stale = False
+        self._ef_resid = np.zeros((spec.cut_dim,), np.float32)
+        self._encode_cache: dict = {}
+        self._update = jax.jit(self._make_update())
+
+    # -- jitted halves -------------------------------------------------------
+
+    def _encode_fn(self, comp: C.Compressor):
+        """Jitted bottom forward + encode half, one cache entry per
+        compressor object (distinct (k, bits) -> distinct entry)."""
+        fn = self._encode_cache.get(comp)
+        if fn is None:
+            ef = self.ef
+
+            def encode(bottom, x, key, resid):
+                o = tabular.bottom_fn(bottom, x)
+                if ef:
+                    o = o + resid[None, :]
+                p = comp.encode(o, key=key, training=True)
+                if ef:
+                    dec = comp.decode(p, shape=o.shape, dtype=o.dtype)
+                    resid = jnp.mean(o - dec, axis=0)
+                return p, resid
+
+            fn = self._encode_cache[comp] = jax.jit(encode)
+        return fn
+
+    def _make_update(self):
+        spec = self.spec
+
+        def update(bottom, opt, x, g_cut):
+            o, vjp = jax.vjp(lambda bp: tabular.bottom_fn(bp, x), bottom)
+            g = g_cut
+            if spec.method == "l1":
+                g = g + spec.l1_lam * jnp.sign(o) / x.shape[0]
+            (db,) = vjp(g)
+            new_b, new_opt, _ = adamw_update(bottom, db, opt, lr=spec.lr,
+                                             grad_clip=0.0)
+            return new_b, new_opt
+
+        return update
+
+    def _compressor(self, k: int, bits: int) -> C.Compressor:
+        """(k, bits) from the schedule -> codec object. k >= d means the
+        dense warmup phase (identity transfer); otherwise delegate to the
+        shared SplitSpec dispatch with the scheduled (k, bits) swapped in."""
+        spec = self.spec
+        if spec.method in (None, "none") or (k >= spec.cut_dim
+                                             and bits == 0):
+            return C.Compressor()
+        return tabular.spec_compressor(dataclasses.replace(
+            spec, k=k, quant_bits=bits or spec.quant_bits))
+
+    # -- the loop ------------------------------------------------------------
+
+    def run(self) -> None:
+        """Thread target; failures are recorded and surfaced by the engine."""
+        try:
+            self._run()
+        except BaseException as e:
+            self.error = e
+            if self.barrier is not None:
+                self.barrier.abort()    # don't deadlock healthy clients
+        finally:
+            self.endpoint.send(wire.encode_close_frame(self.id))
+
+    def _sync_step(self, step: int, xb, sub) -> np.ndarray:
+        spec = self.spec
+        d = spec.cut_dim
+        if self.scheduler is not None:
+            k, bits = self.scheduler.k_bits(self.sync_count)
+        else:
+            k, bits = spec.k, spec.quant_bits
+        self.sync_count += 1
+        comp = self._compressor(min(k, d), bits)
+        p, resid = self._encode_fn(comp)(self.bottom, xb, sub,
+                                         jnp.asarray(self._ef_resid))
+        p = jax.tree.map(np.asarray, p)
+        self._ef_resid = np.asarray(resid)
+
+        fb = wire.encode_payload_frame(self.id, step, p)
+        self.endpoint.send(fb)
+        hb = wire.payload_frame_header_nbytes(p)
+        self.stats.count_up(hb, len(fb) - hb)
+        # L1's training transport is dense; its fwd_bits models the
+        # worst-case nnz encoding, so account what actually crossed
+        fwd_bits = (d * C.FLOAT_BITS if isinstance(comp, C.L1Reg)
+                    else comp.fwd_bits(d))
+        self.analytic_up += fwd_bits / 8 * xb.shape[0]
+
+        reply = self.endpoint.recv_frame(timeout=self.reply_timeout)
+        if reply is None:
+            raise TimeoutError(f"client {self.id}: no grad frame for step "
+                               f"{step} within {self.reply_timeout}s")
+        assert reply.kind == wire.FRAME_GRAD and reply.session == self.id
+        assert reply.seq == step, (reply.seq, step)
+        self.stats.count_down_frame(reply.header_nbytes,
+                                    reply.payload_nbytes)
+        self.analytic_down += comp.bwd_bits(d) / 8 * xb.shape[0]
+
+        g_cut = np.asarray(protocol.client_grad_decode(
+            reply.payload, fwd_kind=p.meta.kind, indices=p.indices, d=d))
+        if self.scheduler is not None:
+            self.scheduler.observe(reply.loss)
+        self.losses.append((step, reply.loss))
+        self.k_trace.append((step, min(k, d), bits))
+        return g_cut
+
+    def _run(self) -> None:
+        for step in range(self.start_step, self.end_step):
+            xb = jnp.asarray(self.x[self.batch_ids[step]])
+            self._key, sub = jax.random.split(self._key)
+            if self.policy.is_sync(step):
+                g_cut = self._sync_step(step, xb, sub)
+                self._stale, self._has_stale = g_cut, True
+            else:
+                assert self._has_stale, "local step before any sync"
+                g_cut = self._stale     # stale cut gradient (Chen et al.)
+            self.bottom, self.opt = self._update(self.bottom, self.opt, xb,
+                                                 jnp.asarray(g_cut))
+            if (self.barrier is not None and self.ckpt_every
+                    and (step + 1) % self.ckpt_every == 0):
+                self.barrier.wait()     # engine snapshots all parties here
+
+    # -- checkpoint state ----------------------------------------------------
+
+    def state(self) -> dict:
+        s = self.stats
+        return {
+            "bottom": self.bottom, "opt": self.opt,
+            "key": jax.random.key_data(self._key),
+            "ef": self._ef_resid,
+            "stale": self._stale,
+            "has_stale": np.int32(self._has_stale),
+            "sched": (self.scheduler.state() if self.scheduler else {}),
+            # i32/f32: checkpoints restore through jnp, which truncates
+            # 64-bit under the default x64-disabled config
+            "counters": np.asarray(
+                [s.frames_up, s.payload_bytes_up, s.header_bytes_up,
+                 s.frames_down, s.bytes_down, s.payload_bytes_down,
+                 s.header_bytes_down, self.sync_count], np.int32),
+            "analytic": np.asarray([self.analytic_up, self.analytic_down],
+                                   np.float32),
+        }
+
+    def load_state(self, st: dict) -> None:
+        self.bottom = st["bottom"]
+        self.opt = st["opt"]
+        self._key = jax.random.wrap_key_data(jnp.asarray(st["key"]))
+        self._ef_resid = np.asarray(st["ef"])
+        self._stale = np.asarray(st["stale"])
+        self._has_stale = bool(st["has_stale"])
+        if self.scheduler is not None and st["sched"]:
+            self.scheduler.load_state(st["sched"])
+        c = np.asarray(st["counters"])
+        (self.stats.frames_up, self.stats.payload_bytes_up,
+         self.stats.header_bytes_up, self.stats.frames_down,
+         self.stats.bytes_down, self.stats.payload_bytes_down,
+         self.stats.header_bytes_down, self.sync_count) = (
+            int(v) for v in c)
+        self.analytic_up, self.analytic_down = (
+            float(v) for v in np.asarray(st["analytic"]))

@@ -1,0 +1,185 @@
+"""Orchestration: N training clients + one label-owner server, over frames.
+
+`run_fedtrain` is the training twin of `runtime.engine.run_streaming`: it
+shards the dataset's features over N `TrainingClient`s (the label shard
+stays with the `TrainingServer`), wires every party over in-process byte
+channels, and runs split training with every cut activation and cut
+gradient crossing as real `core.wire` frames — so the result's byte
+accounting is measured, in both directions, and cross-checkable against the
+compressors' Table-2 analytics.
+
+Batch alignment: each client's batch-index stream is a deterministic
+function of (seed + client id), generated up front; the server's
+`labels_for(session, seq)` indexes the label shard through the same stream —
+the simulation stand-in for the out-of-band sample-ID alignment of real
+vertical deployments. With `n_clients=1` the stream, the parameter inits,
+and the per-step PRNG chain reproduce `split.tabular.train` exactly, which
+is what `tests/test_fedtrain.py` pins.
+
+Checkpointing: with `ckpt_dir`/`ckpt_every`, all clients rendezvous on a
+barrier every `ckpt_every` local steps; the barrier action (running while
+every client is paused and the server queue is drained — sync steps are
+blocking, so no frame is in flight) snapshots every party's trainer state
+into one `checkpoint.store` file. A later call with the same config
+auto-resumes from the latest step, restoring params, optimizer moments,
+PRNG chains, EF residuals, stale gradients, schedule state, and byte
+counters. `stop_after_steps` emulates a mid-run kill for the resume tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import store
+from repro.fedtrain.async_policy import AsyncPolicy
+from repro.fedtrain.client import TrainingClient
+from repro.fedtrain.schedule import KScheduler, ScheduleSpec
+from repro.fedtrain.server import TrainingServer
+from repro.optim import adamw_init
+from repro.runtime.session import SessionStats
+from repro.runtime.transport import channel_pair
+from repro.split import tabular
+
+
+def _batch_stream(n: int, batch: int, epochs: int, seed: int) -> List:
+    """Deterministic per-client batch-index stream — replicates
+    `data.synthetic.ManyClassDataset.batches` so n_clients=1 sees exactly
+    the batches `split.tabular.train` would."""
+    rng = np.random.RandomState(seed)
+    ids = []
+    for _ in range(epochs):
+        idx = rng.permutation(n)
+        for i in range(0, n - batch + 1, batch):
+            ids.append(idx[i: i + batch])
+    return ids
+
+
+def run_fedtrain(spec: tabular.SplitSpec, dataset, *, n_clients: int = 1,
+                 epochs: int = 2, batch: int = 64, seed: int = 0,
+                 schedule: Optional[ScheduleSpec] = None,
+                 policy: Optional[AsyncPolicy] = None, ef: bool = False,
+                 max_batch: Optional[int] = None, max_wait: float = 0.005,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
+                 stop_after_steps: Optional[int] = None,
+                 reply_timeout: float = 120.0) -> dict:
+    """Train `spec` over the wire; returns losses, accuracy, measured and
+    analytic byte accounting for both directions, and the final params."""
+    # -- parties -------------------------------------------------------------
+    _, top = tabular.init_parties(jax.random.key(seed), spec)
+    server = TrainingServer(spec, top, adamw_init(top),
+                            max_batch=max_batch or max(1, n_clients),
+                            max_wait=max_wait)
+
+    shards_x = [dataset.x_train[c::n_clients] for c in range(n_clients)]
+    shards_y = [dataset.y_train[c::n_clients] for c in range(n_clients)]
+    streams = [_batch_stream(len(shards_x[c]), batch, epochs, seed + c)
+               for c in range(n_clients)]
+    n_steps = min(len(s) for s in streams)
+    assert n_steps > 0, "shard smaller than one batch"
+    streams = [s[:n_steps] for s in streams]    # barrier-aligned step counts
+    server.labels_for = lambda sid, seq: shards_y[sid][streams[sid][seq]]
+
+    barrier = None
+    ckpt_steps: List[int] = []
+    if ckpt_dir and ckpt_every:
+        clients_box: List[TrainingClient] = []   # filled below
+
+        def _save_action():
+            step = ckpt_steps.pop(0)
+            tree = {"clients": {str(c.id): c.state() for c in clients_box},
+                    "server": server.state()}
+            store.save(ckpt_dir, step, tree)
+
+        barrier = threading.Barrier(n_clients, action=_save_action)
+
+    clients: List[TrainingClient] = []
+    for cid in range(n_clients):
+        cep, sep = channel_pair()
+        server.attach(sep)
+        clients.append(TrainingClient(
+            cid, spec, shards_x[cid], streams[cid], cep, seed=seed + cid,
+            scheduler=KScheduler(schedule) if schedule else None,
+            policy=policy, ef=ef, barrier=barrier, ckpt_every=ckpt_every,
+            reply_timeout=reply_timeout))
+    if barrier is not None:
+        clients_box.extend(clients)
+
+    # -- resume --------------------------------------------------------------
+    start_step = 0
+    if ckpt_dir:
+        last = store.latest_step(ckpt_dir)
+        if last >= 0:
+            like = {"clients": {str(c.id): c.state() for c in clients},
+                    "server": server.state()}
+            restored = store.restore(ckpt_dir, last, like)
+            for c in clients:
+                c.load_state(restored["clients"][str(c.id)])
+            server.load_state(restored["server"])
+            start_step = last
+
+    end_step = min(n_steps, stop_after_steps or n_steps)
+    for c in clients:
+        c.start_step, c.end_step = start_step, end_step
+    if barrier is not None:
+        ckpt_steps.extend(m for m in range(start_step + 1, end_step + 1)
+                          if m % ckpt_every == 0)
+
+    # -- run -----------------------------------------------------------------
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=c.run, daemon=True) for c in clients]
+    for t in threads:
+        t.start()
+    server.train_loop()
+    for t in threads:
+        t.join(timeout=300)
+    wall = time.perf_counter() - t0
+
+    if server.errors:
+        raise RuntimeError(f"server reader threads failed: {server.errors}") \
+            from server.errors[0]
+    errs = [(c.id, c.error) for c in clients if c.error is not None]
+    if errs:
+        raise RuntimeError(f"training clients failed: {errs}") from errs[0][1]
+
+    # -- evaluate + account --------------------------------------------------
+    accs = []
+    for c in clients:
+        spec_eval = spec
+        if c.scheduler is not None:
+            spec_eval = dataclasses.replace(spec, k=c.scheduler.cur_k)
+        accs.append(tabular.evaluate(c.bottom, server.top, spec_eval,
+                                     jax.numpy.asarray(dataset.x_test),
+                                     jax.numpy.asarray(dataset.y_test)))
+
+    cstats = [c.stats.as_dict() for c in clients]
+    # a fully-resumed run (start == end, e.g. rerun after completion) sends
+    # only CLOSE frames, so the server may hold no session for a client
+    sstats = [(server.sessions[c.id].stats.as_dict()
+               if c.id in server.sessions else SessionStats().as_dict())
+              for c in clients]
+    return {
+        "losses": [c.losses for c in clients],
+        "k_trace": [c.k_trace for c in clients],
+        "client_stats": cstats,
+        "server_stats": sstats,
+        "test_acc": accs,
+        "mean_test_acc": float(np.mean(accs)),
+        "payload_bytes_up": sum(s["payload_bytes_up"] for s in cstats),
+        "payload_bytes_down": sum(s["payload_bytes_down"] for s in cstats),
+        "header_bytes": sum(s["header_bytes_up"] + s["header_bytes_down"]
+                            for s in cstats),
+        "analytic_bytes_up": sum(c.analytic_up for c in clients),
+        "analytic_bytes_down": sum(c.analytic_down for c in clients),
+        "final_k": [c.scheduler.cur_k if c.scheduler else spec.k
+                    for c in clients],
+        "steps": end_step,
+        "n_clients": n_clients,
+        "bottoms": [c.bottom for c in clients],
+        "top": server.top,
+        "wall_s": wall,
+    }

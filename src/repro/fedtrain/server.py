@@ -1,0 +1,148 @@
+"""Label-owner training server — the top model + loss across the wire.
+
+One reader thread per client connection parses `core.wire` frames into a
+`runtime.batching.BatchingQueue` (the same admission policy the serving
+runtime uses); the single train loop flushes the queue and, for each
+received activation frame in arrival order, decodes the self-described
+payload to the dense cut view (`protocol.server_decode`), runs the top
+model + loss with an explicit `jax.vjp` — the party boundary is literal,
+no autodiff shortcut through the wire — updates the top optimizer, and
+streams the compressed cut gradient back as a `grad` frame
+(`protocol.server_grad_encode` + `wire.encode_grad_frame`, which also
+carries the scalar step loss the client's schedule feeds on).
+
+Top-model updates are applied sequentially in flush arrival order: with one
+client this is exactly the paper's alternating two-party loop (and
+bit-for-bit reproducible); with N clients the flush amortizes queue/host
+overhead while updates interleave by arrival. Labels never cross the wire —
+the engine hands the server a `labels_for(session, seq)` view of the
+label-owner's shard, aligned with the clients' deterministic batch streams
+(the stand-in for the sample-ID alignment real VFL deployments do out of
+band).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import wire
+from repro.optim import adamw_update
+from repro.runtime.batching import BatchingQueue
+from repro.runtime.session import Session
+from repro.split import protocol, tabular
+
+
+class TrainingServer:
+    """Top-model training engine over framed byte channels."""
+
+    def __init__(self, spec: tabular.SplitSpec, top, opt, *,
+                 max_batch: int = 4, max_wait: float = 0.005):
+        self.spec = spec
+        self.top = top
+        self.opt = opt
+        self.queue = BatchingQueue(max_batch, max_wait)
+        self.sessions: Dict[int, Session] = {}
+        self.batch_sizes: List[int] = []
+        self.step_count = 0
+        self.labels_for: Callable = None    # set by the engine
+        self.errors: List[BaseException] = []
+        self._lock = threading.Lock()
+        self._open_readers = 0
+        self._step = jax.jit(self._make_step())
+
+    def _make_step(self):
+        spec = self.spec
+
+        def step(top, opt, view, y):
+            (loss, _), vjp = jax.vjp(
+                lambda tp, o: tabular.top_fn(tp, o, y), top, view)
+            dtp, dview = vjp((jnp.ones(()),
+                              jnp.zeros((view.shape[0], spec.n_classes))))
+            new_t, new_ot, _ = adamw_update(top, dtp, opt, lr=spec.lr,
+                                            grad_clip=0.0)
+            return new_t, new_ot, loss, dview
+
+        return step
+
+    # -- connection handling (same shape as runtime.server) ------------------
+
+    def attach(self, endpoint) -> threading.Thread:
+        with self._lock:
+            self._open_readers += 1
+        t = threading.Thread(target=self._read_loop, args=(endpoint,),
+                             daemon=True)
+        t.start()
+        return t
+
+    def _read_loop(self, endpoint) -> None:
+        try:
+            while True:
+                frame = endpoint.recv_frame(timeout=0.1)
+                if frame is None:
+                    continue
+                if frame.kind == wire.FRAME_CLOSE:
+                    with self._lock:
+                        if frame.session in self.sessions:
+                            self.sessions[frame.session].closed = True
+                    return
+                assert frame.kind == wire.FRAME_PAYLOAD, frame.kind
+                sess = self._session_for(frame.session, endpoint)
+                sess.stats.count_up(frame.header_nbytes, frame.payload_nbytes)
+                self.queue.put((sess, frame))
+        except BaseException as e:      # surfaced by engine.run_fedtrain
+            with self._lock:
+                self.errors.append(e)
+        finally:
+            with self._lock:
+                self._open_readers -= 1
+                last = self._open_readers == 0
+            if last:
+                self.queue.close()      # train loop drains, then exits
+
+    def _session_for(self, sid: int, endpoint) -> Session:
+        with self._lock:
+            sess = self.sessions.get(sid)
+            if sess is None:
+                sess = Session(id=sid, cache=None, endpoint=endpoint)
+                self.sessions[sid] = sess
+            return sess
+
+    # -- training ------------------------------------------------------------
+
+    def train_loop(self) -> None:
+        """Flush/process until every client connection closed and drained."""
+        while True:
+            batch = self.queue.get_batch(idle_timeout=0.05)
+            if batch:
+                self._process(batch)
+            elif self.queue.drained:
+                return
+
+    def _process(self, items) -> None:
+        self.batch_sizes.append(len(items))
+        for sess, frame in items:
+            view = jnp.asarray(protocol.server_decode(frame.payload))
+            y = jnp.asarray(self.labels_for(sess.id, frame.seq))
+            self.top, self.opt, loss, dview = self._step(
+                self.top, self.opt, view, y)
+            gp = protocol.server_grad_encode(frame.payload,
+                                             np.asarray(dview))
+            gf = wire.encode_grad_frame(sess.id, frame.seq, gp, float(loss))
+            sess.endpoint.send(gf)
+            sess.stats.count_down_frame(wire.grad_frame_header_nbytes(gp),
+                                        len(gf)
+                                        - wire.grad_frame_header_nbytes(gp))
+            self.step_count += 1
+
+    # -- checkpoint state ----------------------------------------------------
+
+    def state(self) -> dict:
+        return {"top": self.top, "opt": self.opt}
+
+    def load_state(self, st: dict) -> None:
+        self.top = st["top"]
+        self.opt = st["opt"]

@@ -21,8 +21,10 @@ class SessionStats:
     frames_up: int = 0          # payload frames sent client -> server
     payload_bytes_up: int = 0   # codec bitstream bytes only
     header_bytes_up: int = 0    # framing overhead (length prefix + headers)
-    frames_down: int = 0        # token frames server -> client
-    bytes_down: int = 0         # total token-frame bytes
+    frames_down: int = 0        # token/grad frames server -> client
+    bytes_down: int = 0         # total down-direction frame bytes
+    payload_bytes_down: int = 0  # grad-frame codec bitstream bytes (training)
+    header_bytes_down: int = 0   # grad-frame framing bytes (training)
     tokens_out: int = 0         # tokens the client kept (generated, not prompt)
 
     @property
@@ -42,12 +44,24 @@ class SessionStats:
         self.frames_down += 1
         self.bytes_down += nbytes
 
+    def count_down_frame(self, header_nbytes: int,
+                         payload_nbytes: int) -> None:
+        """Down-direction frame with the payload/framing split — the
+        training grad frames, whose payload bytes the Table-2 bwd column
+        models (serving token replies keep the aggregate `count_down`)."""
+        self.frames_down += 1
+        self.header_bytes_down += header_nbytes
+        self.payload_bytes_down += payload_nbytes
+        self.bytes_down += header_nbytes + payload_nbytes
+
     def as_dict(self) -> dict:
         return dict(frames_up=self.frames_up,
                     payload_bytes_up=self.payload_bytes_up,
                     header_bytes_up=self.header_bytes_up,
                     frames_down=self.frames_down,
                     bytes_down=self.bytes_down,
+                    payload_bytes_down=self.payload_bytes_down,
+                    header_bytes_down=self.header_bytes_down,
                     tokens_out=self.tokens_out)
 
 

@@ -24,7 +24,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import compressors
-from repro.core.payload import Payload
+from repro.core.payload import Payload, PayloadMeta
 from repro.models.config import ArchConfig, Runtime, SplitConfig
 
 
@@ -170,6 +170,39 @@ def server_decode(p: Payload, *, dtype=None):
     frame's subheader fully describes the payload.
     """
     return compressors.payload_to_dense(p, dtype=dtype)
+
+
+def server_grad_encode(p: Payload, g) -> Payload:
+    """Label-owner backward half: compress the dense cut gradient (..., d)
+    to the wire payload the *forward* payload's kind dictates (Table 2 bwd).
+
+    Sparse forward kinds send only the k gradient floats at the forward
+    support (the feature owner already holds the indices), `slice` the first
+    k, dense/quant kinds the full-precision dense gradient — the same rules
+    `_grad_to_wire` applies inside the fused custom-VJP path. The returned
+    payload has numpy leaves, ready for `core.wire.encode_grad_frame`.
+    """
+    import numpy as np
+
+    kind = p.meta.kind
+    d = p.meta.d
+    k = min(p.meta.k or d, d)
+    idx = None if p.indices is None else jnp.asarray(p.indices)
+    gw = _grad_to_wire(kind, jnp.asarray(g), idx, k)
+    sparse_bwd = kind in ("sparse", "sparse_quant", "slice")
+    meta = (PayloadMeta("slice", d=d, k=k) if sparse_bwd
+            else PayloadMeta("dense", d=d))
+    return Payload(meta=meta, values=np.asarray(gw, np.float32))
+
+
+def client_grad_decode(gp: Payload, *, fwd_kind: str, indices=None,
+                       d: int):
+    """Feature-owner backward half: dense (..., d) cut gradient from a
+    received grad payload, routed onto the support of the forward payload
+    the client sent (scatter for sparse kinds, pad for slice, identity for
+    dense/quant — the paper's same-mask backward / STE rules)."""
+    idx = None if indices is None else jnp.asarray(indices)
+    return _grad_from_wire(fwd_kind, jnp.asarray(gp.values), idx, d)
 
 
 def cut_boundary(x, cfg: ArchConfig, rt: Runtime, key) -> tuple:

@@ -34,3 +34,11 @@ def test_streaming_clients_example():
     out = _run_example("examples/streaming_clients.py")
     assert "identity" in out and "randtopk" in out
     assert "tok/s" in out
+
+
+@pytest.mark.slow
+def test_fedtrain_two_party_example():
+    out = _run_example("examples/fedtrain_two_party.py")
+    assert "randtopk" in out
+    assert "B/step up" in out and "B/step down" in out
+    assert "test acc" in out

@@ -93,6 +93,63 @@ def test_payload_frame_roundtrip_all_kinds(name, kw):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.parametrize("name,kw", ALL_COMPRESSORS)
+def test_grad_frame_roundtrip_all_kinds(name, kw):
+    """Backward wire: the grad payload a forward kind dictates frames,
+    decodes, and routes back onto the forward support exactly."""
+    from repro.split import protocol
+
+    d = 48
+    comp = C.make_compressor(name, **kw)
+    rng = np.random.RandomState(11)
+    x = jax.numpy.asarray(rng.randn(2, d).astype(np.float32))
+    p = jax.tree.map(np.asarray,
+                     comp.encode(x, key=jax.random.key(0), training=True))
+    g = rng.randn(2, d).astype(np.float32)
+    gp = protocol.server_grad_encode(p, g)
+    buf = wire.encode_grad_frame(session=5, seq=7, p=gp, loss=1.5)
+    frame, consumed = wire.decode_frame(buf)
+    assert consumed == len(buf) == frame.nbytes
+    assert (frame.kind, frame.session, frame.seq) == (wire.FRAME_GRAD, 5, 7)
+    assert frame.loss == 1.5
+    assert frame.payload.meta == gp.meta
+    assert frame.payload_nbytes == wire.payload_nbytes(gp)
+    assert frame.header_nbytes == wire.grad_frame_header_nbytes(gp)
+    g_cut = np.asarray(protocol.client_grad_decode(
+        frame.payload, fwd_kind=p.meta.kind, indices=p.indices, d=d))
+    assert g_cut.shape == g.shape
+    if p.meta.kind in ("sparse", "sparse_quant"):
+        mask = np.zeros_like(g, dtype=bool)
+        np.put_along_axis(mask, p.indices.astype(np.int64), True, axis=-1)
+        np.testing.assert_array_equal(g_cut, g * mask)
+    elif p.meta.kind == "slice":
+        k = p.meta.k
+        np.testing.assert_array_equal(g_cut[..., :k], g[..., :k])
+        assert not g_cut[..., k:].any()
+    else:
+        np.testing.assert_array_equal(g_cut, g)
+
+
+def test_grad_frame_bwd_bytes_match_table2():
+    """Grad payload bytes ARE the Table-2 bwd column, measured: k floats
+    for sparse kinds, d floats for dense/quant."""
+    from repro.core.payload import Payload, PayloadMeta
+    from repro.split import protocol
+
+    d, k, n = 64, 5, 3
+    g = np.zeros((n, d), np.float32)
+    sparse_fwd = Payload(meta=PayloadMeta("sparse", d=d, k=k),
+                         values=np.zeros((n, k), np.float32),
+                         indices=np.arange(k, dtype=np.uint16)[None].repeat(
+                             n, 0))
+    assert wire.payload_nbytes(
+        protocol.server_grad_encode(sparse_fwd, g)) == 4 * k * n
+    dense_fwd = Payload(meta=PayloadMeta("dense", d=d),
+                        values=np.zeros((n, d), np.float32))
+    assert wire.payload_nbytes(
+        protocol.server_grad_encode(dense_fwd, g)) == 4 * d * n
+
+
 def test_token_and_close_frames():
     buf = wire.encode_token_frame(3, 9, [42, 7]) + wire.encode_close_frame(3)
     f1, off = wire.decode_frame(buf)
