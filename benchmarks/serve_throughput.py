@@ -22,14 +22,26 @@ import jax
 import numpy as np
 
 import repro.configs as configs
+from repro.core import wire
 from repro.models import transformer
 from repro.models.config import SplitConfig
 from repro.runtime import engine
+from repro.split import protocol
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 BENCH_PATH = ROOT / "BENCH_serve.json"
 
 TOL = 0.05  # measured-vs-analytic relative tolerance (acceptance bar)
+
+
+def _codec_frame_payload_nbytes(cfg, comp) -> int:
+    """Exact payload bytes one serving frame of `comp` carries — the codec's
+    own bitstream length for a (1, 1, d) activation, independent of any
+    framing (version byte, CRC trailer, subheaders)."""
+    p = protocol.client_encode(
+        comp, jax.numpy.zeros((1, 1, cfg.d_model), np.float32),
+        key=jax.random.key(0), training=False)
+    return wire.payload_nbytes(p)
 
 
 def _mix_rows(cfg, res, emit) -> list:
@@ -55,15 +67,29 @@ def _mix_rows(cfg, res, emit) -> list:
         analytic = comp.fwd_bits(cfg.d_model) / 8
         rel_err = abs(measured - analytic) / analytic
         ok = rel_err < TOL
+        # frame-integrity overhead (version byte + CRC32 trailer) is framing,
+        # never payload: measured payload bytes must equal the codec's own
+        # bitstream length exactly — byte-identical to the pre-CRC format
+        codec_B = _codec_frame_payload_nbytes(cfg, comp)
+        payload_exact = all(
+            s["payload_bytes_up"] == s["frames_up"] * codec_B
+            for s in stats)
+        integrity = wire.FRAME_INTEGRITY_NBYTES
         rows.append(dict(compressor=name, n_sessions=len(stats),
                          measured_B_per_token=measured,
                          framing_B_per_token=header,
+                         integrity_B_per_frame=integrity,
                          analytic_B_per_token=analytic, rel_err=rel_err,
-                         ok=bool(ok)))
+                         payload_exact=bool(payload_exact),
+                         ok=bool(ok and payload_exact)))
         emit(f"serve,{name},sessions={len(stats)},"
              f"measured_B={measured:.1f},analytic_B={analytic:.1f},"
              f"framing_B={header:.1f},rel_err={rel_err:.4f}")
+        emit(f"serve,{name},integrity_B_per_frame={integrity}"
+             f",framing_B_per_frame={header:.1f}"
+             f",payload_B_per_frame={codec_B}")
         emit(f"serve_check,{name},bytes_within_5pct,{ok}")
+        emit(f"serve_check,{name},payload_bytes_codec_exact,{payload_exact}")
     return rows
 
 

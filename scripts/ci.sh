@@ -9,6 +9,12 @@ cd "$(dirname "$0")/.."
 # README/docs links must point at files that exist
 python scripts/check_docs.py
 
+# seeded chaos smoke: streaming + fedtrain under an injected FaultPlan
+# (corrupt/truncate/drop/duplicate/reorder) must complete with tokens and
+# losses identical to the clean run — CRC catches every corruption, sessions
+# reconnect and resume via seq replay
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/chaos_smoke.py
+
 # streaming serving smoke: 8-client dense/randtopk mix, measured bytes must
 # match the Table-2 analytics within 5% (writes BENCH_serve.json)
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/serve_throughput.py --smoke

@@ -25,12 +25,22 @@ self-described payload plus the scalar step loss. `repro.runtime` builds
 the multi-client serving loop and `repro.fedtrain` the split-training loop
 on these frames; the normative layout spec (with executable examples) lives
 in docs/wire-format.md.
+
+Every frame carries a protocol-version byte and closes with a CRC32 trailer
+over everything after the length prefix: a bit-packed index stream in which
+one flipped bit silently decodes to *wrong indices* makes integrity
+non-optional, so corruption surfaces as a typed `WireError`
+(`ChecksumError` / `TruncatedFrame` / `UnknownKind` / `BadCount` /
+`VersionMismatch`) and never as a plausible-but-wrong payload. Version and
+CRC bytes are framing overhead — they land in `Frame.header_nbytes`, never
+in `payload_nbytes`, so the Table-2 payload analytics are untouched.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
 import struct
+import zlib
 from typing import Iterator, Optional, Tuple
 
 import numpy as np
@@ -38,6 +48,38 @@ import numpy as np
 from repro.core.payload import KINDS, Payload, PayloadMeta
 
 FLOAT_BITS = 32
+
+
+# ---------------------------------------------------------------------------
+# Typed wire-error taxonomy. Every defect a hostile/lossy byte stream can
+# present decodes to one of these — never to a silently-wrong payload.
+# WireError subclasses ValueError so pre-taxonomy callers keep working.
+# ---------------------------------------------------------------------------
+
+class WireError(ValueError):
+    """Base class: the byte stream is not a well-formed frame."""
+
+
+class ChecksumError(WireError):
+    """CRC32 trailer disagrees with the frame bytes (corruption in flight)."""
+
+
+class TruncatedFrame(WireError):
+    """Frame body too short for its declared contents (or an absurd
+    length prefix that could never be satisfied)."""
+
+
+class UnknownKind(WireError):
+    """Unrecognized frame kind or payload kind index."""
+
+
+class BadCount(WireError):
+    """A count/shape field (token count, d, k, bits, batch shape) is out of
+    range or disagrees with the body length."""
+
+
+class VersionMismatch(WireError):
+    """Frame carries a protocol version this decoder does not speak."""
 
 
 def index_bits(d: int) -> int:
@@ -229,13 +271,16 @@ def bytes_per_step(method: str, d: int, n_instances: int, *, k: int = 0,
 # Normative spec (with executable examples): docs/wire-format.md.
 # ---------------------------------------------------------------------------
 
-WIRE_VERSION = 1
+#: version 2 = CRC32 trailer appended and counted in body_len (v1 had no
+#: trailer); a v1 peer's frames fail the version gate, not the CRC gate
+WIRE_VERSION = 2
 
 #: frame kinds
 FRAME_PAYLOAD = 1   # client -> server: one compressed cut activation
 FRAME_TOKENS = 2    # server -> client: greedy-decoded next token(s)
 FRAME_CLOSE = 3     # either direction: end of session
 FRAME_GRAD = 4      # server -> client: compressed cut gradient + step loss
+FRAME_ERROR = 5     # either direction: typed rejection, connection is dying
 
 # <u32 body_len> <u8 version> <u8 frame_kind> <u32 session> <u32 seq>
 _FRAME_HEAD = struct.Struct("<IBBII")
@@ -243,9 +288,33 @@ _FRAME_HEAD = struct.Struct("<IBBII")
 _PAYLOAD_HEAD = struct.Struct("<BIIBB")
 _TOKENS_HEAD = struct.Struct("<I")       # <u32 count>, then count x i32
 _GRAD_TAIL = struct.Struct("<f")         # <f32 loss> closing a grad subheader
+_ERROR_HEAD = struct.Struct("<BH")       # <u8 code> <u16 msg_len>, then msg
+_CRC = struct.Struct("<I")               # crc32 trailer closing every frame
 
 #: fixed per-frame byte overhead before any payload/token body
 FRAME_HEAD_NBYTES = _FRAME_HEAD.size
+#: integrity bytes per frame: the version byte + the crc32 trailer
+FRAME_INTEGRITY_NBYTES = 1 + _CRC.size
+#: a length prefix beyond this is treated as corrupt rather than waited on
+MAX_FRAME_BODY = 1 << 27
+#: max batch-shape rank a payload subheader may declare
+MAX_PAYLOAD_NDIM = 8
+
+#: error-frame codes, one per WireError subclass
+ERR_CHECKSUM, ERR_TRUNCATED, ERR_UNKNOWN_KIND, ERR_BAD_COUNT, \
+    ERR_VERSION, ERR_PROTOCOL = 1, 2, 3, 4, 5, 6
+
+_ERROR_CODES = ((ChecksumError, ERR_CHECKSUM), (TruncatedFrame, ERR_TRUNCATED),
+                (UnknownKind, ERR_UNKNOWN_KIND), (BadCount, ERR_BAD_COUNT),
+                (VersionMismatch, ERR_VERSION))
+
+
+def error_code(exc: BaseException) -> int:
+    """Map a WireError (or any rejection) to its error-frame code."""
+    for cls, code in _ERROR_CODES:
+        if isinstance(exc, cls):
+            return code
+    return ERR_PROTOCOL
 
 
 @dataclasses.dataclass(frozen=True)
@@ -266,6 +335,8 @@ class Frame:
     payload: Optional[Payload] = None       # FRAME_PAYLOAD / FRAME_GRAD
     tokens: Optional[np.ndarray] = None     # FRAME_TOKENS, int32
     loss: Optional[float] = None            # FRAME_GRAD, training step loss
+    error_code: Optional[int] = None        # FRAME_ERROR, ERR_* code
+    error_msg: Optional[str] = None         # FRAME_ERROR, short description
     header_nbytes: int = 0
     payload_nbytes: int = 0
 
@@ -275,16 +346,20 @@ class Frame:
 
 
 def _frame(kind: int, session: int, seq: int, body: bytes) -> bytes:
-    head = _FRAME_HEAD.pack(len(body) + _FRAME_HEAD.size - 4, WIRE_VERSION,
-                            kind, session, seq)
-    return head + body
+    head = _FRAME_HEAD.pack(
+        len(body) + _FRAME_HEAD.size - 4 + _CRC.size, WIRE_VERSION,
+        kind, session, seq)
+    buf = head + body
+    # crc32 covers version..body (everything after the length prefix)
+    return buf + _CRC.pack(zlib.crc32(memoryview(buf)[4:]))
 
 
 def payload_frame_header_nbytes(p: Payload) -> int:
     """Framing bytes of `encode_payload_frame(p)` — everything that is not
     the payload bitstream (deterministic; used for byte accounting without
     re-encoding the payload)."""
-    return _FRAME_HEAD.size + _PAYLOAD_HEAD.size + 4 * len(p.batch_shape)
+    return (_FRAME_HEAD.size + _PAYLOAD_HEAD.size + 4 * len(p.batch_shape)
+            + _CRC.size)
 
 
 def _payload_subheader(p: Payload) -> bytes:
@@ -333,50 +408,144 @@ def encode_close_frame(session: int, seq: int = 0) -> bytes:
     return _frame(FRAME_CLOSE, session, seq, b"")
 
 
+def encode_error_frame(session: int, seq: int, code: int,
+                       msg: str = "") -> bytes:
+    """Frame a typed rejection: the receiver of a malformed frame reports
+    the `ERR_*` code + a short reason, then closes the connection. The
+    session may then be resumed over a fresh connection (seq replay)."""
+    mb = msg.encode("utf-8", "replace")[:512]
+    return _frame(FRAME_ERROR, session, seq, _ERROR_HEAD.pack(code, len(mb))
+                  + mb)
+
+
+def payload_expected_nbytes(meta: PayloadMeta, batch_shape) -> int:
+    """Exact `encode_payload` byte count for (meta, batch_shape) — each
+    bit-packed section rounds up to whole bytes independently."""
+    n = int(np.prod(batch_shape, dtype=np.int64)) if batch_shape else 1
+    kind, d, k, r = meta.kind, meta.d, meta.k, index_bits(meta.d)
+    if kind == "dense":
+        return 4 * n * d
+    if kind == "slice":
+        return 4 * n * k
+    if kind == "sparse":
+        return 4 * n * k + (n * k * r + 7) // 8
+    if kind == "quant":
+        return 8 * n + (n * d * meta.bits + 7) // 8
+    if kind == "sparse_quant":
+        return 8 * n + (n * k * r + 7) // 8 + (n * k * meta.bits + 7) // 8
+    raise UnknownKind(kind)
+
+
+def _validated_meta(kind_idx: int, d: int, k: int, bits: int) -> PayloadMeta:
+    if kind_idx >= len(KINDS):
+        raise UnknownKind(f"payload kind index {kind_idx}")
+    kind = KINDS[kind_idx]
+    if not 1 <= d <= 65536:                 # uint16 indices bound d
+        raise BadCount(f"payload d={d} out of range")
+    if kind in ("slice", "sparse", "sparse_quant") and not 1 <= k <= d:
+        raise BadCount(f"{kind} payload k={k} out of range for d={d}")
+    if kind in ("quant", "sparse_quant") and not 1 <= bits <= 8:
+        raise BadCount(f"{kind} payload bits={bits} out of range")
+    return PayloadMeta(kind, d=d, k=k, bits=bits)
+
+
 def decode_frame(buf, offset: int = 0) -> Optional[Tuple[Frame, int]]:
     """Parse one frame starting at `offset` (bytes or bytearray).
 
     Returns (frame, next_offset), or None if the buffer does not yet hold a
-    complete frame (stream reassembly — see `FrameReader`).
+    complete frame (stream reassembly — see `FrameReader`). A frame that is
+    complete per its length prefix but malformed raises a typed `WireError`:
+    the CRC32 trailer is verified before anything else is trusted, so a
+    flipped bit anywhere surfaces as `ChecksumError`, never as silently
+    wrong indices/values.
     """
     if len(buf) - offset < 4:
         return None
     (body_len,) = struct.unpack_from("<I", buf, offset)
+    if body_len < _FRAME_HEAD.size - 4 + _CRC.size:
+        raise TruncatedFrame(f"frame body length {body_len} below the "
+                             f"head+crc minimum")
+    if body_len > MAX_FRAME_BODY:
+        raise TruncatedFrame(f"frame body length {body_len} exceeds "
+                             f"MAX_FRAME_BODY ({MAX_FRAME_BODY})")
     end = offset + 4 + body_len
     if len(buf) < end:
         return None
+    body_end = end - _CRC.size
     _, version, kind, session, seq = _FRAME_HEAD.unpack_from(buf, offset)
+    # version gate BEFORE the checksum gate: a peer speaking another layout
+    # (e.g. v1, whose frames carry no CRC trailer) must surface as a
+    # version skew, not as phantom corruption
     if version != WIRE_VERSION:
-        raise ValueError(f"wire version {version}, expected {WIRE_VERSION}")
+        raise VersionMismatch(f"wire version {version}, expected "
+                              f"{WIRE_VERSION}")
+    (crc_stored,) = _CRC.unpack_from(buf, body_end)
+    crc = zlib.crc32(memoryview(buf)[offset + 4: body_end])
+    if crc != crc_stored:
+        raise ChecksumError(f"frame crc32 {crc_stored:#010x} != computed "
+                            f"{crc:#010x}")
     pos = offset + _FRAME_HEAD.size
     if kind in (FRAME_PAYLOAD, FRAME_GRAD):
+        if pos + _PAYLOAD_HEAD.size > body_end:
+            raise TruncatedFrame("payload subheader overruns frame body")
         kind_idx, d, k, bits, ndim = _PAYLOAD_HEAD.unpack_from(buf, pos)
         pos += _PAYLOAD_HEAD.size
+        if ndim > MAX_PAYLOAD_NDIM:
+            raise BadCount(f"payload batch rank {ndim} exceeds "
+                           f"{MAX_PAYLOAD_NDIM}")
+        if pos + 4 * ndim > body_end:
+            raise TruncatedFrame("payload batch shape overruns frame body")
         bshape = struct.unpack_from(f"<{ndim}I", buf, pos) if ndim else ()
         pos += 4 * ndim
+        if any(dim < 1 for dim in bshape):
+            raise BadCount(f"payload batch shape {bshape} has a zero dim")
         loss = None
         if kind == FRAME_GRAD:
+            if pos + _GRAD_TAIL.size > body_end:
+                raise TruncatedFrame("grad loss field overruns frame body")
             (loss,) = _GRAD_TAIL.unpack_from(buf, pos)
             pos += _GRAD_TAIL.size
-        meta = PayloadMeta(KINDS[kind_idx], d=d, k=k, bits=bits)
-        payload = decode_payload(buf[pos:end], meta, bshape)
+        meta = _validated_meta(kind_idx, d, k, bits)
+        expect = payload_expected_nbytes(meta, bshape)
+        if body_end - pos != expect:
+            raise BadCount(f"{meta.kind} payload of batch shape {bshape} "
+                           f"needs {expect} B, frame carries "
+                           f"{body_end - pos} B")
+        payload = decode_payload(buf[pos:body_end], meta, bshape)
         return (Frame(kind, session, seq, payload=payload, loss=loss,
-                      header_nbytes=pos - offset,
-                      payload_nbytes=end - pos), end)
+                      header_nbytes=pos - offset + _CRC.size,
+                      payload_nbytes=body_end - pos), end)
     if kind == FRAME_TOKENS:
+        if pos + _TOKENS_HEAD.size > body_end:
+            raise TruncatedFrame("token count field overruns frame body")
         (count,) = _TOKENS_HEAD.unpack_from(buf, pos)
         pos += _TOKENS_HEAD.size
-        if pos + 4 * count != end:
-            raise ValueError(f"token frame count {count} disagrees with "
-                             f"body length {end - pos}")
+        if pos + 4 * count != body_end:
+            raise BadCount(f"token frame count {count} disagrees with "
+                           f"body length {body_end - pos}")
         toks = np.frombuffer(buf, dtype="<i4", count=count, offset=pos).copy()
         return (Frame(kind, session, seq, tokens=toks,
-                      header_nbytes=_FRAME_HEAD.size + _TOKENS_HEAD.size,
+                      header_nbytes=(_FRAME_HEAD.size + _TOKENS_HEAD.size
+                                     + _CRC.size),
                       payload_nbytes=4 * count), end)
     if kind == FRAME_CLOSE:
+        if pos != body_end:
+            raise BadCount(f"close frame carries {body_end - pos} "
+                           f"unexpected body bytes")
         return (Frame(kind, session, seq,
-                      header_nbytes=_FRAME_HEAD.size), end)
-    raise ValueError(f"unknown frame kind {kind}")
+                      header_nbytes=_FRAME_HEAD.size + _CRC.size), end)
+    if kind == FRAME_ERROR:
+        if pos + _ERROR_HEAD.size > body_end:
+            raise TruncatedFrame("error frame header overruns frame body")
+        code, msg_len = _ERROR_HEAD.unpack_from(buf, pos)
+        pos += _ERROR_HEAD.size
+        if pos + msg_len != body_end:
+            raise BadCount(f"error frame msg_len {msg_len} disagrees with "
+                           f"body length {body_end - pos}")
+        msg = bytes(buf[pos:body_end]).decode("utf-8", "replace")
+        return (Frame(kind, session, seq, error_code=code, error_msg=msg,
+                      header_nbytes=end - offset), end)
+    raise UnknownKind(f"unknown frame kind {kind}")
 
 
 class FrameReader:
@@ -384,19 +553,32 @@ class FrameReader:
 
     Chunk boundaries need not align with frame boundaries — partial frames
     are buffered until complete, and consumed prefixes are dropped.
+
+    A `WireError` raised mid-iteration poisons the reader: frame boundaries
+    downstream of a corrupt length/CRC cannot be trusted, so every later
+    `frames()` call re-raises and the connection must be torn down (the
+    session itself can resume over a fresh connection — see
+    `repro.runtime`).
     """
 
     def __init__(self):
         self._buf = bytearray()
+        self._broken: Optional[WireError] = None
 
     def feed(self, data: bytes) -> None:
         self._buf.extend(data)
 
     def frames(self) -> Iterator[Frame]:
+        if self._broken is not None:
+            raise self._broken
         while True:
             # decode straight off the bytearray (no full-buffer copy);
             # decode_payload copies out every array it returns
-            got = decode_frame(self._buf)
+            try:
+                got = decode_frame(self._buf)
+            except WireError as e:
+                self._broken = e
+                raise
             if got is None:
                 return
             frame, consumed = got

@@ -18,6 +18,13 @@ Policies plug in at two points:
   * `AsyncPolicy` (async_policy.py) decides which steps sync at all; local
     steps train against the cached stale gradient and never touch the wire.
 
+Recovery is the stop-and-wait ARQ loop of `runtime.arq.ArqClientMixin`
+(shared with the serving client): each sync step's frame carries the step
+as sequence number, the grad reply echoes it, and the client retransmits on
+timeout, drops stale duplicate replies, and reconnects + replays on an
+`error` frame or a corrupt downstream. The server dedups by seq, so a
+replayed step never double-steps the top optimizer.
+
 Optional error feedback keeps a per-client mean-residual vector `e in R^d`
 (the batch mean of what compression dropped), added to the next batch's
 activations pre-encode — the weakest-state SL analogue of EF memory; the
@@ -39,19 +46,24 @@ from repro.core import compressors as C, wire
 from repro.fedtrain.async_policy import AsyncPolicy
 from repro.fedtrain.schedule import KScheduler
 from repro.optim import adamw_init, adamw_update
+from repro.runtime.arq import ArqClientMixin
 from repro.runtime.session import SessionStats
 from repro.split import protocol, tabular
 
 
-class TrainingClient:
+class TrainingClient(ArqClientMixin):
     """One feature owner driving its training shard over the wire."""
+
+    _reply_kind = wire.FRAME_GRAD
 
     def __init__(self, cid: int, spec: tabular.SplitSpec, x_shard: np.ndarray,
                  batch_ids: List[np.ndarray], endpoint, *, seed: int,
                  scheduler: Optional[KScheduler] = None,
                  policy: Optional[AsyncPolicy] = None, ef: bool = False,
                  barrier=None, ckpt_every: int = 0,
-                 reply_timeout: float = 120.0):
+                 reply_timeout: float = 120.0,
+                 retry_timeout: Optional[float] = None,
+                 max_retries: int = 16, reconnect=None):
         self.id = cid
         self.spec = spec
         self.x = np.asarray(x_shard, np.float32)
@@ -63,6 +75,9 @@ class TrainingClient:
         self.barrier = barrier
         self.ckpt_every = ckpt_every
         self.reply_timeout = reply_timeout
+        self.retry_timeout = retry_timeout  # None -> never retransmit
+        self.max_retries = max_retries
+        self.reconnect = reconnect          # () -> fresh endpoint
 
         self.start_step = 0
         self.end_step = len(batch_ids)
@@ -149,6 +164,12 @@ class TrainingClient:
         finally:
             self.endpoint.send(wire.encode_close_frame(self.id))
 
+    def _count_reply(self, reply: wire.Frame) -> None:
+        # grad replies keep the payload/framing split: their payload bytes
+        # ARE the Table-2 bwd column
+        self.stats.count_down_frame(reply.header_nbytes,
+                                    reply.payload_nbytes)
+
     def _sync_step(self, step: int, xb, sub) -> np.ndarray:
         spec = self.spec
         d = spec.cut_dim
@@ -173,14 +194,7 @@ class TrainingClient:
                     else comp.fwd_bits(d))
         self.analytic_up += fwd_bits / 8 * xb.shape[0]
 
-        reply = self.endpoint.recv_frame(timeout=self.reply_timeout)
-        if reply is None:
-            raise TimeoutError(f"client {self.id}: no grad frame for step "
-                               f"{step} within {self.reply_timeout}s")
-        assert reply.kind == wire.FRAME_GRAD and reply.session == self.id
-        assert reply.seq == step, (reply.seq, step)
-        self.stats.count_down_frame(reply.header_nbytes,
-                                    reply.payload_nbytes)
+        reply = self._await_reply(step, fb, hb)
         self.analytic_down += comp.bwd_bits(d) / 8 * xb.shape[0]
 
         g_cut = np.asarray(protocol.client_grad_decode(

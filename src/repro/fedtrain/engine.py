@@ -41,6 +41,7 @@ from repro.fedtrain.client import TrainingClient
 from repro.fedtrain.schedule import KScheduler, ScheduleSpec
 from repro.fedtrain.server import TrainingServer
 from repro.optim import adamw_init
+from repro.runtime import engine as runtime_engine
 from repro.runtime.session import SessionStats
 from repro.runtime.transport import channel_pair
 from repro.split import tabular
@@ -66,14 +67,23 @@ def run_fedtrain(spec: tabular.SplitSpec, dataset, *, n_clients: int = 1,
                  max_batch: Optional[int] = None, max_wait: float = 0.005,
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
                  stop_after_steps: Optional[int] = None,
-                 reply_timeout: float = 120.0) -> dict:
+                 reply_timeout: float = 120.0, wrap_endpoint=None,
+                 retry_timeout: Optional[float] = None,
+                 max_retries: int = 16) -> dict:
     """Train `spec` over the wire; returns losses, accuracy, measured and
-    analytic byte accounting for both directions, and the final params."""
+    analytic byte accounting for both directions, aggregated
+    `fault_counters`, and the final params.
+
+    `wrap_endpoint(cid, endpoint) -> endpoint` intercepts every client-side
+    connection (initial + reconnect) — the hook
+    `repro.testing.faults.FaultInjector` uses to run training under seeded
+    chaos; `retry_timeout` enables stop-and-wait retransmission."""
     # -- parties -------------------------------------------------------------
     _, top = tabular.init_parties(jax.random.key(seed), spec)
     server = TrainingServer(spec, top, adamw_init(top),
                             max_batch=max_batch or max(1, n_clients),
                             max_wait=max_wait)
+    server.expected_sessions = n_clients
 
     shards_x = [dataset.x_train[c::n_clients] for c in range(n_clients)]
     shards_y = [dataset.y_train[c::n_clients] for c in range(n_clients)]
@@ -97,15 +107,23 @@ def run_fedtrain(spec: tabular.SplitSpec, dataset, *, n_clients: int = 1,
 
         barrier = threading.Barrier(n_clients, action=_save_action)
 
-    clients: List[TrainingClient] = []
-    for cid in range(n_clients):
+    def _connect(cid: int):
+        """One client connection (also the reconnect path): fresh channel
+        pair, server reader attached, client half optionally wrapped."""
         cep, sep = channel_pair()
         server.attach(sep)
+        return wrap_endpoint(cid, cep) if wrap_endpoint else cep
+
+    clients: List[TrainingClient] = []
+    for cid in range(n_clients):
         clients.append(TrainingClient(
-            cid, spec, shards_x[cid], streams[cid], cep, seed=seed + cid,
+            cid, spec, shards_x[cid], streams[cid], _connect(cid),
+            seed=seed + cid,
             scheduler=KScheduler(schedule) if schedule else None,
             policy=policy, ef=ef, barrier=barrier, ckpt_every=ckpt_every,
-            reply_timeout=reply_timeout))
+            reply_timeout=reply_timeout, retry_timeout=retry_timeout,
+            max_retries=max_retries,
+            reconnect=lambda cid=cid: _connect(cid)))
     if barrier is not None:
         clients_box.extend(clients)
 
@@ -131,12 +149,16 @@ def run_fedtrain(spec: tabular.SplitSpec, dataset, *, n_clients: int = 1,
 
     # -- run -----------------------------------------------------------------
     t0 = time.perf_counter()
+    train_thread = threading.Thread(target=server.train_loop, daemon=True)
+    train_thread.start()
     threads = [threading.Thread(target=c.run, daemon=True) for c in clients]
     for t in threads:
         t.start()
-    server.train_loop()
     for t in threads:
         t.join(timeout=300)
+    # guaranteed stop even if a CLOSE frame was lost to injected faults
+    server.shutdown()
+    train_thread.join(timeout=120)
     wall = time.perf_counter() - t0
 
     if server.errors:
@@ -175,6 +197,7 @@ def run_fedtrain(spec: tabular.SplitSpec, dataset, *, n_clients: int = 1,
                             for s in cstats),
         "analytic_bytes_up": sum(c.analytic_up for c in clients),
         "analytic_bytes_down": sum(c.analytic_down for c in clients),
+        "fault_counters": runtime_engine.fault_summary(server, clients),
         "final_k": [c.scheduler.cur_k if c.scheduler else spec.k
                     for c in clients],
         "steps": end_step,

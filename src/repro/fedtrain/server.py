@@ -19,11 +19,17 @@ the engine hands the server a `labels_for(session, seq)` view of the
 label-owner's shard, aligned with the clients' deterministic batch streams
 (the stand-in for the sample-ID alignment real VFL deployments do out of
 band).
+
+Fault tolerance mirrors `runtime.server`: malformed frames are rejected with
+a typed `error` frame and a connection retire (never a dead thread), the
+session survives for the client's reconnect, and stop-and-wait dedup by
+sequence number re-acks replayed steps from the cached grad frame — the top
+optimizer never double-steps, which is what keeps the faulted loss
+trajectory bit-identical to the clean one.
 """
 from __future__ import annotations
 
-import threading
-from typing import Callable, Dict, List
+from typing import Callable, List
 
 import jax
 import jax.numpy as jnp
@@ -32,27 +38,29 @@ import numpy as np
 from repro.core import wire
 from repro.optim import adamw_update
 from repro.runtime.batching import BatchingQueue
+from repro.runtime.server import FrameServerBase
 from repro.runtime.session import Session
 from repro.split import protocol, tabular
 
 
-class TrainingServer:
+class TrainingServer(FrameServerBase):
     """Top-model training engine over framed byte channels."""
+
+    direction = "training"
 
     def __init__(self, spec: tabular.SplitSpec, top, opt, *,
                  max_batch: int = 4, max_wait: float = 0.005):
         self.spec = spec
         self.top = top
         self.opt = opt
-        self.queue = BatchingQueue(max_batch, max_wait)
-        self.sessions: Dict[int, Session] = {}
         self.batch_sizes: List[int] = []
         self.step_count = 0
         self.labels_for: Callable = None    # set by the engine
-        self.errors: List[BaseException] = []
-        self._lock = threading.Lock()
-        self._open_readers = 0
+        self._init_connections(BatchingQueue(max_batch, max_wait))
         self._step = jax.jit(self._make_step())
+
+    def _new_session(self, sid: int, endpoint) -> Session:
+        return Session(id=sid, cache=None, endpoint=endpoint)
 
     def _make_step(self):
         spec = self.spec
@@ -68,50 +76,9 @@ class TrainingServer:
 
         return step
 
-    # -- connection handling (same shape as runtime.server) ------------------
-
-    def attach(self, endpoint) -> threading.Thread:
-        with self._lock:
-            self._open_readers += 1
-        t = threading.Thread(target=self._read_loop, args=(endpoint,),
-                             daemon=True)
-        t.start()
-        return t
-
-    def _read_loop(self, endpoint) -> None:
-        try:
-            while True:
-                frame = endpoint.recv_frame(timeout=0.1)
-                if frame is None:
-                    continue
-                if frame.kind == wire.FRAME_CLOSE:
-                    with self._lock:
-                        if frame.session in self.sessions:
-                            self.sessions[frame.session].closed = True
-                    return
-                assert frame.kind == wire.FRAME_PAYLOAD, frame.kind
-                sess = self._session_for(frame.session, endpoint)
-                sess.stats.count_up(frame.header_nbytes, frame.payload_nbytes)
-                self.queue.put((sess, frame))
-        except BaseException as e:      # surfaced by engine.run_fedtrain
-            with self._lock:
-                self.errors.append(e)
-        finally:
-            with self._lock:
-                self._open_readers -= 1
-                last = self._open_readers == 0
-            if last:
-                self.queue.close()      # train loop drains, then exits
-
-    def _session_for(self, sid: int, endpoint) -> Session:
-        with self._lock:
-            sess = self.sessions.get(sid)
-            if sess is None:
-                sess = Session(id=sid, cache=None, endpoint=endpoint)
-                self.sessions[sid] = sess
-            return sess
-
     # -- training ------------------------------------------------------------
+    # (connection handling — attach/readers/rejection/sessions — is
+    # inherited from runtime.server.FrameServerBase)
 
     def train_loop(self) -> None:
         """Flush/process until every client connection closed and drained."""
@@ -123,8 +90,24 @@ class TrainingServer:
                 return
 
     def _process(self, items) -> None:
-        self.batch_sizes.append(len(items))
+        kept = 0
         for sess, frame in items:
+            # stop-and-wait dedup: the client never has two frames in
+            # flight, so any seq above the last processed one is fresh
+            # progress (async local steps and checkpoint resume both skip
+            # seqs); anything at or below it is a replay and must NOT
+            # re-run the top update (the optimizer would double-step) —
+            # re-ack the latest from cache instead.
+            if frame.seq <= sess.last_seq:
+                sess.stats.duplicates += 1
+                if (frame.seq == sess.last_seq
+                        and sess.last_reply is not None):
+                    sess.endpoint.send(sess.last_reply)
+                    sess.stats.count_down_frame(
+                        sess.last_reply_header,
+                        len(sess.last_reply) - sess.last_reply_header)
+                continue
+            kept += 1
             view = jnp.asarray(protocol.server_decode(frame.payload))
             y = jnp.asarray(self.labels_for(sess.id, frame.seq))
             self.top, self.opt, loss, dview = self._step(
@@ -132,11 +115,14 @@ class TrainingServer:
             gp = protocol.server_grad_encode(frame.payload,
                                              np.asarray(dview))
             gf = wire.encode_grad_frame(sess.id, frame.seq, gp, float(loss))
+            sess.last_seq, sess.last_reply = frame.seq, gf
+            sess.last_reply_header = wire.grad_frame_header_nbytes(gp)
             sess.endpoint.send(gf)
-            sess.stats.count_down_frame(wire.grad_frame_header_nbytes(gp),
-                                        len(gf)
-                                        - wire.grad_frame_header_nbytes(gp))
+            sess.stats.count_down_frame(sess.last_reply_header,
+                                        len(gf) - sess.last_reply_header)
             self.step_count += 1
+        if kept:
+            self.batch_sizes.append(kept)
 
     # -- checkpoint state ----------------------------------------------------
 

@@ -4,27 +4,40 @@ Runs the bottom model against its own KV cache, compresses each cut
 activation and pulls the payload to host (the `split.protocol.client_encode`
 half, fused into the jitted bottom step), frames it as `core.wire` bytes,
 and blocks on the server's token reply before advancing — the classic
-split-inference loop, one round trip per token. Prompt tokens are prefilled through the same path (the server's top
-model must see them to build its KV), with the replies discarded until the
-prompt is exhausted.
+split-inference loop, one round trip per token. Prompt tokens are prefilled
+through the same path (the server's top model must see them to build its
+KV), with the replies discarded until the prompt is exhausted.
+
+Recovery is the stop-and-wait ARQ loop of `runtime.arq.ArqClientMixin`:
+requests carry the step as their sequence number, token replies echo it,
+and the client retransmits on timeout, drops stale duplicates, and
+reconnects + replays through the engine-provided `reconnect` callable when
+a connection dies. With a clean wire and `retry_timeout=None` the path is
+byte-identical to the pre-ARQ loop.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import numpy as np
 
 from repro.core import wire
+from repro.runtime.arq import ArqClientMixin
 from repro.runtime.session import SessionStats
 
 
-class StreamingClient:
+class StreamingClient(ArqClientMixin):
     """One simulated feature owner driving a session to completion."""
+
+    _reply_kind = wire.FRAME_TOKENS
 
     def __init__(self, session_id: int, params, cache, bottom_step,
                  endpoint, prompt: np.ndarray, gen: int,
-                 reply_timeout: float = 60.0):
+                 reply_timeout: float = 60.0,
+                 retry_timeout: Optional[float] = None,
+                 max_retries: int = 16,
+                 reconnect: Optional[Callable] = None):
         self.id = session_id
         self.params = params
         self.cache = cache
@@ -33,9 +46,15 @@ class StreamingClient:
         self.prompt = np.asarray(prompt, np.int32).reshape(-1)
         self.gen = gen
         self.reply_timeout = reply_timeout
+        self.retry_timeout = retry_timeout      # None -> never retransmit
+        self.max_retries = max_retries
+        self.reconnect = reconnect              # () -> fresh endpoint
         self.stats = SessionStats()
         self.generated: list = []
         self.error: Optional[BaseException] = None
+
+    def _count_reply(self, reply: wire.Frame) -> None:
+        self.stats.count_down(reply.nbytes)
 
     def run(self) -> None:
         """Thread target; on any failure records the exception and closes."""
@@ -59,12 +78,7 @@ class StreamingClient:
             self.stats.count_up(header_nbytes=hb,
                                 payload_nbytes=len(frame_bytes) - hb)
 
-            reply = self.endpoint.recv_frame(timeout=self.reply_timeout)
-            if reply is None:
-                raise TimeoutError(f"session {self.id}: no reply to frame "
-                                   f"{step} within {self.reply_timeout}s")
-            assert reply.kind == wire.FRAME_TOKENS and reply.session == self.id
-            self.stats.count_down(reply.nbytes)
+            reply = self._await_reply(step, frame_bytes, hb)
             nxt = int(reply.tokens[0])
             if step + 1 < len(self.prompt):
                 token = np.asarray([[self.prompt[step + 1]]], np.int32)

@@ -42,12 +42,21 @@ def _client_compressors(cfg: ArchConfig, n_clients: int,
 def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
                   gen: int = 8, max_batch: Optional[int] = None,
                   max_wait: float = 0.01, compressor_mix=None, seed: int = 0,
-                  params=None) -> dict:
+                  params=None, wrap_endpoint=None,
+                  retry_timeout: Optional[float] = None,
+                  max_retries: int = 16) -> dict:
     """Serve `n_clients` concurrent sessions of `prompt_len + gen` tokens.
 
     Returns a dict with the generated tokens `(n_clients, gen)`, per-session
     client/server stats dicts, the per-client compressor names, the server's
-    batch-fill history, and wall-clock throughput.
+    batch-fill history, wall-clock throughput, and the aggregated
+    `fault_counters` (all zero on a clean wire).
+
+    `wrap_endpoint(cid, endpoint) -> endpoint` intercepts every client-side
+    connection — initial and reconnect — which is how
+    `repro.testing.faults.FaultInjector` runs the whole stack under seeded
+    chaos. `retry_timeout` enables stop-and-wait retransmission (needed for
+    drop faults); None keeps the clean-wire single-wait behavior.
     """
     rt = Runtime(mesh=None, training=False)
     cut = (cfg.split.cut_layer if cfg.split and cfg.split.cut_layer > 0
@@ -66,17 +75,27 @@ def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
     server = StreamingServer(params, steps.make_top_step(cfg, rt, cut),
                              make_cache, max_batch=max_batch,
                              max_wait=max_wait, dtype=cfg.adtype())
+    server.expected_sessions = n_clients
 
     prompts = np.asarray(jax.random.randint(
         jax.random.key(seed + 1), (n_clients, prompt_len), 0, cfg.vocab))
 
-    clients: List[StreamingClient] = []
-    for cid in range(n_clients):
+    def _connect(cid: int):
+        """One client connection: fresh channel pair, server reader attached,
+        client half optionally wrapped (fault injection). Also the reconnect
+        path — a resuming client calls this for a clean channel onto its
+        surviving server-side session."""
         cep, sep = channel_pair()
         server.attach(sep)
+        return wrap_endpoint(cid, cep) if wrap_endpoint else cep
+
+    clients: List[StreamingClient] = []
+    for cid in range(n_clients):
         clients.append(StreamingClient(
-            cid, params, make_cache(), bottom_steps[comps[cid]], cep,
-            prompts[cid], gen))
+            cid, params, make_cache(), bottom_steps[comps[cid]],
+            _connect(cid), prompts[cid], gen,
+            retry_timeout=retry_timeout, max_retries=max_retries,
+            reconnect=lambda cid=cid: _connect(cid)))
 
     # warm both steps up BEFORE spawning threads: one compile, not a storm
     tok0 = np.zeros((1, 1), np.int32)
@@ -90,12 +109,16 @@ def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
         jax.tree.map(lambda *a: jax.numpy.stack(a), *([cache0] * max_batch)))
 
     t0 = time.perf_counter()
+    serve_thread = threading.Thread(target=server.serve_loop, daemon=True)
+    serve_thread.start()
     threads = [threading.Thread(target=c.run, daemon=True) for c in clients]
     for t in threads:
         t.start()
-    server.serve_loop()
     for t in threads:
         t.join(timeout=120)
+    # guaranteed stop even if a CLOSE frame was lost to injected faults
+    server.shutdown()
+    serve_thread.join(timeout=60)
     wall = time.perf_counter() - t0
 
     if server.errors:
@@ -115,9 +138,27 @@ def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
         "compressors": [c.name for c in comps],
         "compressor_objs": comps,
         "batch_sizes": server.batch_sizes,
+        "fault_counters": fault_summary(server, clients),
         "wall_s": wall,
         "tokens_per_s": tokens.size / max(wall, 1e-9),
         "n_clients": n_clients,
         "max_batch": max_batch,
         "cut_layer": cut,
     }
+
+
+def fault_summary(server, clients) -> dict:
+    """Aggregate recovery counters across both parties — reported by
+    `run_streaming`/`run_fedtrain` alongside the byte accounting. All zero
+    on a clean wire; under injected chaos, the measured recovery record."""
+    out = {"server_faults_detected": server.faults_detected,
+           "client_faults_detected": 0, "duplicates": 0, "replays": 0,
+           "reconnects": 0}
+    for c in clients:
+        out["client_faults_detected"] += c.stats.faults_detected
+        out["replays"] += c.stats.replays
+        out["reconnects"] += c.stats.reconnects
+        out["duplicates"] += c.stats.duplicates
+    for sess in server.sessions.values():
+        out["duplicates"] += sess.stats.duplicates
+    return out

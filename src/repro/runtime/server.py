@@ -8,6 +8,14 @@ gets batched decodes), and runs one vmapped top-model step over the whole
 flush — every session row against its own KV cache and position. Token
 replies stream back as frames; per-session byte accounting is taken from the
 real frame sizes at receipt.
+
+Fault tolerance: a malformed frame (typed `wire.WireError` — CRC failure,
+bad counts, truncation) no longer kills a reader thread silently. The reader
+replies with an `error` frame naming the defect and retires the connection;
+the *session* survives, and the client reconnects over a fresh channel and
+replays from its last unacknowledged sequence number. Stop-and-wait dedup in
+the serve loop (`Session.last_seq` / `last_reply`) re-acks replayed frames
+without re-running the top-model step, so a KV cache never double-advances.
 """
 from __future__ import annotations
 
@@ -25,7 +33,131 @@ from repro.runtime.session import Session
 from repro.split import protocol
 
 
-class StreamingServer:
+class FrameServerBase:
+    """Connection plumbing shared by the serving and training servers:
+    one reader thread per attached channel, typed rejection of malformed
+    frames with an `error` frame + connection retire (never a dead
+    thread), a session registry that survives reconnects, and the
+    queue-close lifecycle.
+
+    Subclasses call `_init_connections` from __init__, implement
+    `_new_session(sid, endpoint)`, and set `direction` (the label protocol
+    violations are reported under).
+    """
+
+    direction = "serving"
+
+    def _init_connections(self, queue: BatchingQueue) -> None:
+        self.queue = queue
+        self.sessions: Dict[int, Session] = {}
+        self._lock = threading.Lock()
+        self._readers: List[threading.Thread] = []
+        self._open_readers = 0
+        self.errors: List[BaseException] = []   # reader-thread failures
+        self.faults_detected = 0    # malformed frames rejected (connections
+        #                             retired with an error frame, not dead)
+        self.expected_sessions: int = 0     # set by the engine; the serve
+        #   loop must not stop before this many sessions exist AND closed
+        #   (a corrupt first frame can retire a connection before its
+        #   session was ever created — the reconnect needs a live queue)
+
+    def _new_session(self, sid: int, endpoint) -> Session:
+        raise NotImplementedError
+
+    def attach(self, endpoint) -> threading.Thread:
+        """Register a client channel and start its frame-reader thread.
+
+        Called once per client at startup and again for each reconnect — a
+        resuming client gets a fresh connection onto its existing session.
+        """
+        with self._lock:
+            self._open_readers += 1
+        t = threading.Thread(target=self._read_loop, args=(endpoint,),
+                             daemon=True)
+        self._readers.append(t)
+        t.start()
+        return t
+
+    def shutdown(self) -> None:
+        """Close the admission queue; the serve loop drains, then exits.
+        The engine calls this after every client thread has finished — the
+        guaranteed stop even if a session's CLOSE frame was lost in chaos."""
+        self.queue.close()
+
+    def _reject(self, endpoint, sid_seen, exc: wire.WireError) -> None:
+        """Name the defect in an error frame and retire the connection,
+        keeping the session (the client reconnects and replays). A fault
+        before any valid frame has no session to charge."""
+        with self._lock:
+            self.faults_detected += 1
+            sess = (self.sessions.get(sid_seen)
+                    if sid_seen is not None else None)
+            if sess is not None:
+                sess.stats.faults_detected += 1
+        endpoint.send(wire.encode_error_frame(
+            sid_seen if sid_seen is not None else 0, 0,
+            wire.error_code(exc), str(exc)))
+
+    def _read_loop(self, endpoint) -> None:
+        sid_seen = None             # session observed on THIS connection
+        try:
+            while True:
+                try:
+                    frame = endpoint.recv_frame(timeout=0.1)
+                except wire.WireError as e:
+                    self._reject(endpoint, sid_seen, e)
+                    return
+                if frame is None:
+                    continue
+                if frame.kind == wire.FRAME_CLOSE:
+                    with self._lock:
+                        if frame.session in self.sessions:
+                            self.sessions[frame.session].closed = True
+                    return
+                if frame.kind == wire.FRAME_ERROR:
+                    return              # peer abandoned this connection
+                if frame.kind != wire.FRAME_PAYLOAD:
+                    raise wire.WireError(
+                        f"unexpected frame kind {frame.kind} on the "
+                        f"{self.direction} up direction")
+                sid_seen = frame.session
+                sess = self._session_for(frame.session, endpoint)
+                sess.stats.count_up(frame.header_nbytes, frame.payload_nbytes)
+                try:
+                    self.queue.put((sess, frame))
+                except RuntimeError:
+                    return              # server shut down under us
+        except wire.WireError as e:     # protocol violation from a valid frame
+            self._reject(endpoint, sid_seen, e)
+        except BaseException as e:      # surfaced by the engine
+            with self._lock:
+                self.errors.append(e)
+        finally:
+            with self._lock:
+                self._open_readers -= 1
+                # natural completion: every connection retired AND every
+                # expected session exists and closed. A reader retired by a
+                # fault (possibly before its session was even created)
+                # holds the queue open for the reconnect; the engine's
+                # shutdown() after the client joins is the backstop.
+                done = (self._open_readers == 0
+                        and len(self.sessions) >= self.expected_sessions
+                        and all(s.closed for s in self.sessions.values()))
+            if done:
+                self.queue.close()          # serve loop drains, then exits
+
+    def _session_for(self, sid: int, endpoint) -> Session:
+        with self._lock:
+            sess = self.sessions.get(sid)
+            if sess is None:
+                sess = self._new_session(sid, endpoint)
+                self.sessions[sid] = sess
+            else:
+                sess.endpoint = endpoint    # replies follow the latest conn
+            return sess
+
+
+class StreamingServer(FrameServerBase):
     """Top-model serving engine over framed byte channels."""
 
     def __init__(self, params, top_step: Callable, make_cache: Callable,
@@ -35,59 +167,11 @@ class StreamingServer:
         self.top_step = jax.jit(top_step)
         self.make_cache = make_cache        # () -> fresh batch-1 cache pytree
         self.dtype = dtype
-        self.queue = BatchingQueue(max_batch, max_wait)
-        self.sessions: Dict[int, Session] = {}
         self.batch_sizes: List[int] = []    # flush fill history
-        self._lock = threading.Lock()
-        self._readers: List[threading.Thread] = []
-        self._open_readers = 0
-        self.errors: List[BaseException] = []   # reader-thread failures
+        self._init_connections(BatchingQueue(max_batch, max_wait))
 
-    # -- connection handling -------------------------------------------------
-
-    def attach(self, endpoint) -> threading.Thread:
-        """Register a client channel and start its frame-reader thread."""
-        with self._lock:
-            self._open_readers += 1
-        t = threading.Thread(target=self._read_loop, args=(endpoint,),
-                             daemon=True)
-        self._readers.append(t)
-        t.start()
-        return t
-
-    def _read_loop(self, endpoint) -> None:
-        try:
-            while True:
-                frame = endpoint.recv_frame(timeout=0.1)
-                if frame is None:
-                    continue
-                if frame.kind == wire.FRAME_CLOSE:
-                    with self._lock:
-                        if frame.session in self.sessions:
-                            self.sessions[frame.session].closed = True
-                    return
-                assert frame.kind == wire.FRAME_PAYLOAD, frame.kind
-                sess = self._session_for(frame.session, endpoint)
-                sess.stats.count_up(frame.header_nbytes, frame.payload_nbytes)
-                self.queue.put((sess, frame))
-        except BaseException as e:      # surfaced by engine.run_streaming
-            with self._lock:
-                self.errors.append(e)
-        finally:
-            with self._lock:
-                self._open_readers -= 1
-                last = self._open_readers == 0
-            if last:
-                self.queue.close()          # serve loop drains, then exits
-
-    def _session_for(self, sid: int, endpoint) -> Session:
-        with self._lock:
-            sess = self.sessions.get(sid)
-            if sess is None:
-                sess = Session(id=sid, cache=self.make_cache(),
-                               endpoint=endpoint)
-                self.sessions[sid] = sess
-            return sess
+    def _new_session(self, sid: int, endpoint) -> Session:
+        return Session(id=sid, cache=self.make_cache(), endpoint=endpoint)
 
     # -- serving -------------------------------------------------------------
 
@@ -100,7 +184,29 @@ class StreamingServer:
             elif self.queue.drained:
                 return
 
+    def _dedup(self, items) -> List:
+        """Stop-and-wait ARQ filter: the client never has two frames in
+        flight, so any seq above the last processed one is fresh progress
+        and anything at or below it is a replay. A replay of the last
+        processed seq is re-acked from the cached reply bytes (the step
+        must NOT re-run — it would advance the KV cache again); anything
+        older is dropped. Both cases count as duplicates.
+        """
+        fresh = []
+        for sess, frame in items:
+            if frame.seq > sess.last_seq:
+                fresh.append((sess, frame))
+                continue
+            sess.stats.duplicates += 1
+            if frame.seq == sess.last_seq and sess.last_reply is not None:
+                sess.endpoint.send(sess.last_reply)
+                sess.stats.count_down(len(sess.last_reply))
+        return fresh
+
     def _process(self, items) -> None:
+        items = self._dedup(items)
+        if not items:
+            return
         self.batch_sizes.append(len(items))
         xs: List = [None] * len(items)
         by_meta: Dict = {}
@@ -126,9 +232,9 @@ class StreamingServer:
         tokens, new_caches = self.top_step(self.params, jnp.asarray(
             np.stack(xs)), cache_stack)
         tokens = np.asarray(tokens)
-        for i, (sess, _) in enumerate(items):
+        for i, (sess, frame) in enumerate(items):
             sess.cache = jax.tree.map(lambda a, i=i: a[i], new_caches)
-            reply = wire.encode_token_frame(sess.id, sess.seq, tokens[i])
-            sess.seq += 1
+            reply = wire.encode_token_frame(sess.id, frame.seq, tokens[i])
+            sess.last_seq, sess.last_reply = frame.seq, reply
             sess.endpoint.send(reply)
             sess.stats.count_down(len(reply))

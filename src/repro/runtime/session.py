@@ -26,6 +26,12 @@ class SessionStats:
     payload_bytes_down: int = 0  # grad-frame codec bitstream bytes (training)
     header_bytes_down: int = 0   # grad-frame framing bytes (training)
     tokens_out: int = 0         # tokens the client kept (generated, not prompt)
+    # fault counters — all zero on a clean wire; under injected chaos they
+    # are the measured recovery record (engine.run_* aggregate them)
+    faults_detected: int = 0    # typed WireErrors caught on this connection
+    duplicates: int = 0         # replayed frames deduplicated by seq
+    replays: int = 0            # retransmissions sent after timeout/error
+    reconnects: int = 0         # fresh connections opened to resume
 
     @property
     def bytes_up(self) -> int:
@@ -62,7 +68,11 @@ class SessionStats:
                     bytes_down=self.bytes_down,
                     payload_bytes_down=self.payload_bytes_down,
                     header_bytes_down=self.header_bytes_down,
-                    tokens_out=self.tokens_out)
+                    tokens_out=self.tokens_out,
+                    faults_detected=self.faults_detected,
+                    duplicates=self.duplicates,
+                    replays=self.replays,
+                    reconnects=self.reconnects)
 
 
 @dataclasses.dataclass
@@ -77,7 +87,13 @@ class Session:
 
     id: int
     cache: Any
-    endpoint: Any = None                # server->client reply half
+    endpoint: Any = None                # server->client reply half (latest
+    #                                     connection — updated on reconnect)
     stats: SessionStats = dataclasses.field(default_factory=SessionStats)
-    seq: int = 0                        # next reply sequence number
     closed: bool = False
+    # stop-and-wait ARQ state: the highest seq processed and its cached
+    # reply bytes, so a replayed frame is re-acked instead of re-processed
+    # (re-processing would double-advance the KV cache / top optimizer)
+    last_seq: int = -1
+    last_reply: Any = None
+    last_reply_header: int = 0          # framing bytes of last_reply

@@ -44,14 +44,25 @@ class Endpoint:
     def send(self, frame_bytes: bytes) -> int:
         return self._out.send(frame_bytes)
 
+    def recv_chunk(self, timeout: Optional[float] = None) -> Optional[bytes]:
+        """Next raw byte chunk off the wire, or None on timeout. The
+        override point for byte-level interception (testing.faults)."""
+        return self._in.recv(timeout=timeout)
+
     def recv_frame(self, timeout: Optional[float] = None):
-        """Next complete frame, or None on timeout. Reassembles chunks."""
+        """Next complete frame, or None on timeout. Reassembles chunks.
+
+        Raises `wire.WireError` if the stream is corrupt; frame boundaries
+        after that are untrustworthy, so the caller must discard this
+        endpoint (and may resume its sessions over a fresh one).
+        """
         while not self._pending:
-            chunk = self._in.recv(timeout=timeout)
+            chunk = self.recv_chunk(timeout=timeout)
             if chunk is None:
                 return None
             self._reader.feed(chunk)
-            self._pending.extend(self._reader.frames())
+            for frame in self._reader.frames():
+                self._pending.append(frame)
         return self._pending.pop(0)
 
 

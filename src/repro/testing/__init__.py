@@ -1,0 +1,12 @@
+"""Test-harness subsystems that run the production stack under adversity.
+
+`faults` drives the streaming/fedtrain runtimes through seeded byte-level
+chaos (corrupt/truncate/drop/duplicate/reorder/re-chunk) via the engines'
+`wrap_endpoint` hook — the proof harness for the frame layer's CRC +
+typed-error + reconnect/replay guarantees.
+"""
+from repro.testing.faults import (DESTRUCTIVE_FAULTS, FAULT_KINDS,
+                                  FaultInjector, FaultPlan, FaultyEndpoint)
+
+__all__ = ["DESTRUCTIVE_FAULTS", "FAULT_KINDS", "FaultInjector", "FaultPlan",
+           "FaultyEndpoint"]

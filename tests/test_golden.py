@@ -1,0 +1,119 @@
+"""Golden-bytes regression: the wire format is pinned by committed blobs.
+
+`tests/golden/*.bin` hold one canonical frame per frame kind (and one per
+payload kind for payload frames), built from fixed arrays with no RNG.
+Each test re-encodes the same inputs and compares byte-for-byte against the
+committed blob, then decodes the blob and checks every field — so any
+accidental layout drift (field order, width, endianness, CRC coverage) in a
+future PR fails loudly against bytes produced by the PR that defined the
+format.
+
+Regenerate after an *intentional* format change (bump `wire.WIRE_VERSION`!):
+
+    PYTHONPATH=src python tests/test_golden.py --regen
+"""
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import wire
+from repro.core.payload import Payload, PayloadMeta
+
+GOLDEN_DIR = pathlib.Path(__file__).resolve().parent / "golden"
+
+
+def _payloads() -> dict:
+    """One fixed payload per kind — deliberately boring, byte-stable."""
+    return {
+        "dense": Payload(
+            meta=PayloadMeta("dense", d=8),
+            values=np.arange(16, dtype=np.float32).reshape(2, 8) / 4),
+        "slice": Payload(
+            meta=PayloadMeta("slice", d=8, k=3),
+            values=np.asarray([[1.0, -2.0, 0.5]], np.float32)),
+        "sparse": Payload(
+            meta=PayloadMeta("sparse", d=16, k=2),
+            values=np.asarray([[1.5, -2.0]], np.float32),
+            indices=np.asarray([[3, 9]], np.uint16)),
+        "quant": Payload(
+            meta=PayloadMeta("quant", d=8, bits=4),
+            values=np.tile(np.arange(8, dtype=np.uint8), (2, 1)),
+            header=np.asarray([[-1.0, 0.125], [0.0, 0.25]], np.float32)),
+        "sparse_quant": Payload(
+            meta=PayloadMeta("sparse_quant", d=16, k=3, bits=8),
+            values=np.asarray([[0, 128, 255]], np.uint8),
+            indices=np.asarray([[1, 8, 15]], np.uint16),
+            header=np.asarray([[-2.0, 0.015625]], np.float32)),
+    }
+
+
+def build_golden() -> dict:
+    """name -> canonical frame bytes, all from fixed inputs."""
+    frames = {}
+    for kind, p in _payloads().items():
+        frames[f"payload_{kind}"] = wire.encode_payload_frame(7, 3, p)
+    frames["grad_slice"] = wire.encode_grad_frame(
+        7, 3, _payloads()["slice"], loss=2.5)
+    frames["grad_dense"] = wire.encode_grad_frame(
+        7, 3, _payloads()["dense"], loss=0.25)
+    frames["tokens"] = wire.encode_token_frame(7, 4, [42, 7, 123456])
+    frames["close"] = wire.encode_close_frame(7, 5)
+    frames["error"] = wire.encode_error_frame(
+        7, 6, wire.ERR_BAD_COUNT, "sparse payload k=99 out of range for d=16")
+    return frames
+
+
+@pytest.mark.parametrize("name", sorted(build_golden()))
+def test_golden_bytes_exact(name):
+    golden = (GOLDEN_DIR / f"{name}.bin").read_bytes()
+    assert build_golden()[name] == golden, (
+        f"{name}: frame bytes drifted from the committed golden blob — if "
+        f"the wire format changed intentionally, bump wire.WIRE_VERSION and "
+        f"regen (PYTHONPATH=src python tests/test_golden.py --regen)")
+
+
+@pytest.mark.parametrize("kind", sorted(_payloads()))
+def test_golden_payload_decodes_exactly(kind):
+    blob = (GOLDEN_DIR / f"payload_{kind}.bin").read_bytes()
+    frame, consumed = wire.decode_frame(blob)
+    assert consumed == len(blob) == frame.nbytes
+    assert (frame.kind, frame.session, frame.seq) == (wire.FRAME_PAYLOAD,
+                                                      7, 3)
+    p = _payloads()[kind]
+    assert frame.payload.meta == p.meta
+    assert frame.payload_nbytes == wire.payload_nbytes(p)
+    for (na, a), (nb, b) in zip(p.wire_leaves(),
+                                frame.payload.wire_leaves()):
+        assert na == nb and a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_golden_nonpayload_decode_fields():
+    g, _ = wire.decode_frame((GOLDEN_DIR / "grad_slice.bin").read_bytes())
+    assert g.kind == wire.FRAME_GRAD and g.loss == 2.5
+    assert g.payload.meta == _payloads()["slice"].meta
+    t, _ = wire.decode_frame((GOLDEN_DIR / "tokens.bin").read_bytes())
+    assert t.tokens.tolist() == [42, 7, 123456] and t.seq == 4
+    c, _ = wire.decode_frame((GOLDEN_DIR / "close.bin").read_bytes())
+    assert c.kind == wire.FRAME_CLOSE and (c.session, c.seq) == (7, 5)
+    e, _ = wire.decode_frame((GOLDEN_DIR / "error.bin").read_bytes())
+    assert e.error_code == wire.ERR_BAD_COUNT
+    assert e.error_msg.startswith("sparse payload k=99")
+
+
+def test_golden_version_byte_is_pinned():
+    """The committed blobs pin WIRE_VERSION itself (2 since the CRC
+    trailer joined the layout)."""
+    for f in sorted(GOLDEN_DIR.glob("*.bin")):
+        assert f.read_bytes()[4] == 2 == wire.WIRE_VERSION, f.name
+
+
+if __name__ == "__main__":
+    if "--regen" not in sys.argv:
+        sys.exit("usage: PYTHONPATH=src python tests/test_golden.py --regen")
+    GOLDEN_DIR.mkdir(exist_ok=True)
+    for name, blob in build_golden().items():
+        (GOLDEN_DIR / f"{name}.bin").write_bytes(blob)
+        print(f"wrote golden/{name}.bin ({len(blob)} B)")

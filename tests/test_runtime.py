@@ -72,6 +72,102 @@ def test_queue_close_drains_ragged_final_batch():
         q.put("nope")
 
 
+def test_queue_concurrent_producers_lose_nothing():
+    """N producer threads hammering put() against a draining consumer:
+    every item comes out exactly once, in batches never exceeding
+    max_batch."""
+    n_producers, per_producer = 8, 200
+    q = BatchingQueue(max_batch=16, max_wait=0.002)
+
+    def produce(pid):
+        for i in range(per_producer):
+            q.put((pid, i))
+
+    threads = [threading.Thread(target=produce, args=(pid,))
+               for pid in range(n_producers)]
+    for t in threads:
+        t.start()
+    got = []
+    deadline = time.monotonic() + 30
+    while len(got) < n_producers * per_producer:
+        assert time.monotonic() < deadline, f"stalled at {len(got)} items"
+        batch = q.get_batch(idle_timeout=0.05)
+        assert len(batch) <= q.max_batch
+        got.extend(batch)
+    for t in threads:
+        t.join()
+    assert q.get_batch(idle_timeout=0.01) == []
+    assert sorted(got) == [(p, i) for p in range(n_producers)
+                           for i in range(per_producer)]
+    # per-producer order is preserved even though batches interleave
+    for pid in range(n_producers):
+        seq = [i for p, i in got if p == pid]
+        assert seq == sorted(seq)
+
+
+def test_queue_close_during_fill_wait_flushes_promptly():
+    """The close-during-flush race: a consumer blocked in the fill wait
+    (partial batch, max_wait not yet elapsed) must be woken by close() and
+    return the pending items immediately — not after max_wait, and never
+    []."""
+    q = BatchingQueue(max_batch=8, max_wait=10.0)   # max_wait must NOT bind
+    result = {}
+
+    def consume():
+        result["batch"] = q.get_batch(idle_timeout=30.0)
+        result["t"] = time.monotonic()
+
+    t = threading.Thread(target=consume)
+    t.start()
+    q.put("a")
+    q.put("b")
+    time.sleep(0.15)                    # let the consumer enter the fill wait
+    t0 = time.monotonic()
+    q.close()
+    t.join(timeout=5.0)
+    assert not t.is_alive(), "consumer still blocked after close()"
+    assert result["batch"] == ["a", "b"]
+    assert result["t"] - t0 < 1.0       # woke on close, not on max_wait
+    assert q.get_batch() == [] and q.drained
+
+
+def test_queue_concurrent_producers_racing_close():
+    """Producers racing close(): items either land in the queue and drain,
+    or the put raises — none vanish silently mid-queue."""
+    q = BatchingQueue(max_batch=4, max_wait=0.001)
+    accepted, rejected = [], []
+    lock = threading.Lock()
+
+    def produce(pid):
+        for i in range(100):
+            try:
+                q.put((pid, i))
+                with lock:
+                    accepted.append((pid, i))
+            except RuntimeError:
+                with lock:
+                    rejected.append((pid, i))
+
+    threads = [threading.Thread(target=produce, args=(pid,))
+               for pid in range(4)]
+    for t in threads:
+        t.start()
+    got = []
+    for _ in range(30):                 # drain some while producers run
+        got.extend(q.get_batch(idle_timeout=0.01))
+    q.close()
+    for t in threads:
+        t.join()
+    while True:
+        batch = q.get_batch(idle_timeout=0.01)
+        if not batch:
+            break
+        got.extend(batch)
+    assert q.drained
+    assert sorted(got) == sorted(accepted)
+    assert len(got) + len(rejected) == 400
+
+
 # ---------------------------------------------------------------------------
 # Transport
 # ---------------------------------------------------------------------------

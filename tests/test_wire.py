@@ -187,11 +187,150 @@ def test_frame_reader_abandoned_iterator_does_not_replay():
     assert [f.seq for f in reader.frames()] == [1]
 
 
-def test_token_frame_count_validated():
+# ---------------------------------------------------------------------------
+# Typed error taxonomy: every malformed-but-CRC-valid frame must raise the
+# *specific* WireError naming the bad field, and raw corruption must raise
+# ChecksumError — never decode silently, never raise something untyped.
+# `_forge` builds frames with arbitrary (inconsistent) contents but a valid
+# CRC, so each validator is reached past the checksum gate.
+# ---------------------------------------------------------------------------
+
+def _forge(kind, body, session=0, seq=0, version=None):
+    buf = bytearray(wire._frame(kind, session, seq, body))
+    if version is not None:
+        buf[4] = version
+        buf[-4:] = wire._CRC.pack(
+            __import__("zlib").crc32(bytes(buf[4:-4])))
+    return bytes(buf)
+
+
+def _payload_body(kind_idx=2, d=16, k=2, bits=0, bshape=(1,),
+                  payload=b"\x00" * 9):
+    sub = wire._PAYLOAD_HEAD.pack(kind_idx, d, k, bits, len(bshape))
+    import struct as _s
+    return (sub + (_s.pack(f"<{len(bshape)}I", *bshape) if bshape else b"")
+            + payload)
+
+
+def test_corrupt_count_raises_typed_badcount():
+    """A token frame whose count field disagrees with the body length must
+    raise the typed BadCount (it used to be a generic ValueError)."""
+    body = wire._TOKENS_HEAD.pack(200) + np.asarray(
+        [1, 2], "<i4").tobytes()
+    with pytest.raises(wire.BadCount, match="count"):
+        wire.decode_frame(_forge(wire.FRAME_TOKENS, body))
+
+
+def test_bad_payload_kind_index_raises_unknown_kind():
+    with pytest.raises(wire.UnknownKind, match="kind index"):
+        wire.decode_frame(_forge(wire.FRAME_PAYLOAD,
+                                 _payload_body(kind_idx=250)))
+
+
+def test_bad_payload_d_raises_badcount():
+    for d in (0, 1 << 20):
+        with pytest.raises(wire.BadCount, match="d="):
+            wire.decode_frame(_forge(wire.FRAME_PAYLOAD,
+                                     _payload_body(d=d)))
+
+
+def test_bad_payload_k_raises_badcount():
+    for k in (0, 17):                    # k must be in [1, d] for sparse
+        with pytest.raises(wire.BadCount, match="k="):
+            wire.decode_frame(_forge(wire.FRAME_PAYLOAD,
+                                     _payload_body(d=16, k=k)))
+
+
+def test_bad_payload_bits_raises_badcount():
+    for bits in (0, 9):                  # quant code width is 1..8
+        with pytest.raises(wire.BadCount, match="bits="):
+            wire.decode_frame(_forge(wire.FRAME_PAYLOAD,
+                                     _payload_body(kind_idx=3, bits=bits)))
+
+
+def test_bad_payload_batch_shape_raises_badcount():
+    with pytest.raises(wire.BadCount, match="zero dim"):
+        wire.decode_frame(_forge(wire.FRAME_PAYLOAD,
+                                 _payload_body(bshape=(0,))))
+    with pytest.raises(wire.BadCount, match="rank"):
+        wire.decode_frame(_forge(wire.FRAME_PAYLOAD,
+                                 _payload_body(bshape=(1,) * 9)))
+
+
+def test_payload_body_length_mismatch_raises_badcount():
+    """Declared (meta, batch shape) must account for the body bytes exactly
+    — one byte short or long is BadCount, not a misdecode."""
+    for payload in (b"\x00" * 8, b"\x00" * 10):     # sparse d=16,k=2 -> 9 B
+        with pytest.raises(wire.BadCount, match="needs 9 B"):
+            wire.decode_frame(_forge(wire.FRAME_PAYLOAD,
+                                     _payload_body(payload=payload)))
+
+
+def test_truncated_subheader_raises_truncated_frame():
+    with pytest.raises(wire.TruncatedFrame):
+        wire.decode_frame(_forge(wire.FRAME_PAYLOAD, b"\x02"))
+    with pytest.raises(wire.TruncatedFrame, match="batch shape"):
+        wire.decode_frame(_forge(
+            wire.FRAME_PAYLOAD,
+            wire._PAYLOAD_HEAD.pack(2, 16, 2, 0, 4) + b"\x01"))
+
+
+def test_grad_frame_missing_loss_raises_truncated_frame():
+    body = wire._PAYLOAD_HEAD.pack(1, 16, 2, 0, 0)   # slice, no loss field
+    with pytest.raises(wire.TruncatedFrame, match="loss"):
+        wire.decode_frame(_forge(wire.FRAME_GRAD, body))
+
+
+def test_close_frame_with_body_raises_badcount():
+    with pytest.raises(wire.BadCount, match="close frame"):
+        wire.decode_frame(_forge(wire.FRAME_CLOSE, b"\x00\x01"))
+
+
+def test_unknown_frame_kind_raises_unknown_kind():
+    with pytest.raises(wire.UnknownKind, match="frame kind"):
+        wire.decode_frame(_forge(77, b""))
+
+
+def test_absurd_length_prefix_raises_truncated_frame():
+    """A corrupt length prefix must fail fast, not stall the reader
+    waiting for bytes that will never come."""
+    import struct as _s
+    with pytest.raises(wire.TruncatedFrame, match="MAX_FRAME_BODY"):
+        wire.decode_frame(_s.pack("<I", wire.MAX_FRAME_BODY + 1) + b"\x00")
+    with pytest.raises(wire.TruncatedFrame, match="minimum"):
+        wire.decode_frame(_s.pack("<I", 3) + b"\x00" * 3)
+
+
+def test_flipped_byte_raises_checksum_error():
     buf = bytearray(wire.encode_token_frame(0, 0, [1, 2]))
-    buf[wire.FRAME_HEAD_NBYTES] = 200    # corrupt the count field
-    with pytest.raises(ValueError, match="count"):
+    buf[wire.FRAME_HEAD_NBYTES] ^= 0x40      # corrupt the count field
+    with pytest.raises(wire.ChecksumError):
         wire.decode_frame(bytes(buf))
+
+
+def test_error_frame_roundtrip():
+    buf = wire.encode_error_frame(9, 3, wire.ERR_BAD_COUNT, "k=99 > d=16")
+    frame, consumed = wire.decode_frame(buf)
+    assert consumed == len(buf) == frame.nbytes == frame.header_nbytes
+    assert frame.kind == wire.FRAME_ERROR and frame.session == 9
+    assert frame.error_code == wire.ERR_BAD_COUNT
+    assert frame.error_msg == "k=99 > d=16"
+    assert frame.payload_nbytes == 0
+    # code mapping covers the whole taxonomy
+    assert wire.error_code(wire.ChecksumError("x")) == wire.ERR_CHECKSUM
+    assert wire.error_code(wire.TruncatedFrame("x")) == wire.ERR_TRUNCATED
+    assert wire.error_code(wire.UnknownKind("x")) == wire.ERR_UNKNOWN_KIND
+    assert wire.error_code(wire.BadCount("x")) == wire.ERR_BAD_COUNT
+    assert wire.error_code(wire.VersionMismatch("x")) == wire.ERR_VERSION
+    assert wire.error_code(RuntimeError("x")) == wire.ERR_PROTOCOL
+
+
+def test_wire_errors_are_value_errors():
+    """Back-compat: pre-taxonomy callers caught ValueError."""
+    for cls in (wire.ChecksumError, wire.TruncatedFrame, wire.UnknownKind,
+                wire.BadCount, wire.VersionMismatch):
+        assert issubclass(cls, wire.WireError)
+        assert issubclass(cls, ValueError)
 
 
 def test_decode_frame_incomplete_returns_none():
@@ -201,10 +340,8 @@ def test_decode_frame_incomplete_returns_none():
 
 
 def test_frame_rejects_unknown_version():
-    buf = bytearray(wire.encode_close_frame(1))
-    buf[4] = 99  # version byte
-    with pytest.raises(ValueError, match="version"):
-        wire.decode_frame(bytes(buf))
+    with pytest.raises(wire.VersionMismatch, match="version"):
+        wire.decode_frame(_forge(wire.FRAME_CLOSE, b"", version=99))
 
 
 def test_wire_format_doc_examples():
