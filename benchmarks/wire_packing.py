@@ -1,10 +1,12 @@
 """Micro-benchmark: vectorized numpy bit packing vs the per-bit Python loop.
 
 `wire._pack_bits` / `_unpack_bits` used to walk every (value, bit) pair in
-Python; the vectorized replacement builds a (n, width) bit matrix with one
-shift broadcast and defers to `np.packbits`/`np.unpackbits`. This bench keeps
-the historical per-bit implementation inline as the baseline, verifies the
-two produce byte-identical streams, and reports the speedup.
+Python; the vectorized pack builds a (n, width) bit matrix with one shift
+broadcast and defers to `np.packbits`, and the vectorized unpack assembles
+each value from two aligned uint64 words of the stream (no bit-matrix
+materialization at all). This bench keeps the historical per-bit
+implementations inline as the baseline, verifies byte-identical streams and
+value-identical unpacks in both directions, and reports both speedups.
 
     PYTHONPATH=src python -m benchmarks.wire_packing
 """
@@ -52,20 +54,31 @@ def _time(fn, reps=5):
 def main(emit=print):
     rng = np.random.RandomState(0)
     ok_all = True
-    for n, width in [(4096, 4), (65536, 7), (65536, 12)]:
+    for n, width in [(4096, 4), (65536, 7), (65536, 12), (65536, 16)]:
         vals = rng.randint(0, 2 ** width, size=n).astype(np.uint64)
         ref = _pack_bits_loop(vals, width)
         new = wire._pack_bits(vals, width)
         same = ref == new
         back = wire._unpack_bits(new, width, n)
+        # unpack must be value-identical to both the pack input and the
+        # per-bit reference unpack (byte-identical wire, both directions)
         same &= bool((back == vals).all())
-        same &= bool((_unpack_bits_loop(new, width, n) == vals).all())
+        same &= bool((_unpack_bits_loop(new, width, n) == back).all())
+        # ragged tail: a count that does not fill the last byte/word
+        for cut in (n - 1, n - 7, 1):
+            part = wire._unpack_bits(new, width, cut)
+            same &= bool((part == vals[:cut]).all())
         ok_all &= same
         t_loop = _time(lambda: _pack_bits_loop(vals, width), reps=3)
         t_vec = _time(lambda: wire._pack_bits(vals, width))
+        t_uloop = _time(lambda: _unpack_bits_loop(new, width, n), reps=3)
+        t_uvec = _time(lambda: wire._unpack_bits(new, width, n))
         emit(f"wire_packing,n={n},width={width},loop_ms={t_loop*1e3:.2f},"
              f"vectorized_ms={t_vec*1e3:.3f},"
              f"speedup={t_loop/max(t_vec, 1e-9):.0f}x,match={same}")
+        emit(f"wire_unpacking,n={n},width={width},"
+             f"loop_ms={t_uloop*1e3:.2f},vectorized_ms={t_uvec*1e3:.3f},"
+             f"speedup={t_uloop/max(t_uvec, 1e-9):.0f}x")
     emit(f"wire_packing_check,vectorized_matches_loop,{ok_all}")
     return ok_all
 

@@ -15,8 +15,13 @@ python scripts/check_docs.py
 # reconnect and resume via seq replay
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/chaos_smoke.py
 
-# streaming serving smoke: 8-client dense/randtopk mix, measured bytes must
-# match the Table-2 analytics within 5% (writes BENCH_serve.json)
+# streaming serving smoke + perf gate: measured bytes must match the
+# Table-2 analytics within 5% AND be byte-exactly the codec's own payload
+# size, and the randtopk/identity tokens-per-second ratio (median of
+# GATE_REPS pure 8-client runs each) must stay above the RATIO_FLOOR
+# pinned in the bench — the compressed path must remain the fast path; a
+# regression to host-side densification fails here. Writes
+# BENCH_serve.json with the ratio, floor, and per-stage timings.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/serve_throughput.py --smoke
 
 # fedtrain smoke: over-the-wire split training; randtopk bytes must match

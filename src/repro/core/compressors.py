@@ -70,11 +70,32 @@ def _ste_bwd(_, g):
 _ste.defvjp(_ste_fwd, _ste_bwd)
 
 
-def payload_to_dense(p: Payload, shape=None, dtype=None):
+def _scatter_rows(vals, idx, d: int, backend):
+    """Dense (..., d) scatter of a sparse support — backend-dispatched.
+
+    ``"pallas"`` runs the VMEM compare-and-select kernel
+    (`kernels.randtopk.ops.scatter_rows`); ``"xla"`` (and the off-TPU
+    ``"auto"`` default) is `put_along_axis`. Same dispatch contract as
+    `selection.topk_mask`.
+    """
+    if selection._resolve_backend(backend) == "pallas":
+        from repro.kernels.randtopk import ops as tk_ops
+
+        return tk_ops.scatter_rows(jnp.asarray(vals), jnp.asarray(idx), d,
+                                   interpret=selection._pallas_interpret())
+    out = jnp.zeros(vals.shape[:-1] + (d,), vals.dtype)
+    return jnp.put_along_axis(out, jnp.asarray(idx).astype(jnp.int32), vals,
+                              axis=-1, inplace=False)
+
+
+def payload_to_dense(p: Payload, shape=None, dtype=None, *, backend=None):
     """Dense view (..., d) of any payload — the label-owner-side Decode.
 
     Compressor-independent: dispatches on `p.meta.kind` only, so the far
-    side of the wire never needs the compressor object itself.
+    side of the wire never needs the compressor object itself. `backend`
+    picks the sparse-scatter implementation (None/"auto" -> Pallas on TPU,
+    XLA elsewhere — the `selection` dispatch contract); results are
+    identical either way for the unique-index supports compressors emit.
     """
     dtype = dtype or jnp.float32
     m = p.meta
@@ -84,21 +105,27 @@ def payload_to_dense(p: Payload, shape=None, dtype=None):
         pad = [(0, 0)] * (p.values.ndim - 1) + [(0, m.d - m.k)]
         return jnp.pad(p.values.astype(dtype), pad)
     if m.kind == "sparse":
-        out = jnp.zeros(p.values.shape[:-1] + (m.d,), dtype)
-        return jnp.put_along_axis(out, p.indices.astype(jnp.int32),
-                                  p.values.astype(dtype), axis=-1,
-                                  inplace=False)
+        return _scatter_rows(p.values.astype(dtype), p.indices, m.d, backend)
     if m.kind == "quant":
-        lo, step = p.header[..., :1], p.header[..., 1:]
-        deq = lo + (p.values.astype(jnp.float32) + 0.5) * step
-        return deq.astype(dtype)
+        return _dequant(p).astype(dtype)
     if m.kind == "sparse_quant":
-        lo, step = p.header[..., :1], p.header[..., 1:]
-        vals = lo + (p.values.astype(jnp.float32) + 0.5) * step
-        out = jnp.zeros(vals.shape[:-1] + (m.d,), dtype)
-        return jnp.put_along_axis(out, p.indices.astype(jnp.int32),
-                                  vals.astype(dtype), axis=-1, inplace=False)
+        return _scatter_rows(_dequant(p).astype(dtype), p.indices, m.d,
+                             backend)
     raise ValueError(m.kind)
+
+
+def _dequant(p: Payload):
+    """`lo + (code + 0.5) * step`.
+
+    Rounding note: under jit the XLA backend may contract the multiply-add
+    into an FMA, so compiled dequant (`protocol.server_decode_device`, the
+    fused `cut_boundary` path) can differ from eager/host dequant by 1 ulp
+    of the step product. Sparse scatter and dense passthrough carry wire
+    values verbatim and are bit-exact in every mode; the dequant ulp is
+    pinned (and shown not to move served tokens) in tests/test_arena.py.
+    """
+    lo, step = p.header[..., :1], p.header[..., 1:]
+    return lo + (jnp.asarray(p.values).astype(jnp.float32) + 0.5) * step
 
 
 @dataclasses.dataclass(frozen=True)

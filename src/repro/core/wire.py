@@ -101,13 +101,34 @@ def _pack_bits(vals: np.ndarray, width: int) -> bytes:
 
 
 def _unpack_bits(buf: bytes, width: int, count: int) -> np.ndarray:
+    """Inverse of `_pack_bits` (same little-endian bit layout).
+
+    Value i is assembled from at most two aligned uint64 words of the
+    stream (`lo = word >> bit_offset`, `hi` the spill from the next word) —
+    no `(count, width)` bit matrix is ever materialized (the historical
+    implementation's `unpackbits` + uint64 shift-matrix reduction cost
+    ~9 x `count x width` bytes of intermediates and a per-bit reduction
+    pass). Byte-identical outputs are pinned by `benchmarks/wire_packing`
+    against the per-bit reference loop.
+    """
     if count == 0 or width == 0:
         return np.zeros(count, dtype=np.uint64)
+    assert width <= 32, "wire value widths are <= 16 index / 8 code bits"
     arr = np.frombuffer(buf, dtype=np.uint8)
-    bits = np.unpackbits(arr, bitorder="little")[: count * width]
-    bits = bits.reshape(count, width).astype(np.uint64)
-    shifts = np.arange(width, dtype=np.uint64)
-    return np.bitwise_or.reduce(bits << shifts, axis=1)
+    nbytes = (count * width + 7) // 8
+    if arr.size < nbytes:
+        raise ValueError(f"bit-packed buffer holds {arr.size} B, "
+                         f"{count} x {width}-bit values need {nbytes} B")
+    padded = np.zeros((nbytes // 8 + 2) * 8, dtype=np.uint8)
+    padded[:nbytes] = arr[:nbytes]
+    words = padded.view("<u8")
+    starts = np.arange(count, dtype=np.uint64) * np.uint64(width)
+    wi = (starts >> np.uint64(6)).astype(np.int64)
+    bit = starts & np.uint64(63)
+    lo = words[wi] >> bit
+    hi = words[wi + 1] << ((np.uint64(64) - bit) & np.uint64(63))
+    hi = np.where(bit == np.uint64(0), np.uint64(0), hi)
+    return (lo | hi) & np.uint64((1 << width) - 1)
 
 
 def encode_sparse(values: np.ndarray, indices: np.ndarray, d: int) -> bytes:
@@ -119,8 +140,8 @@ def encode_sparse(values: np.ndarray, indices: np.ndarray, d: int) -> bytes:
 
 
 def decode_sparse(buf: bytes, k_total: int, d: int):
-    vb = buf[: 4 * k_total]
-    values = np.frombuffer(vb, dtype="<f4").copy()
+    """`buf` must be caller-owned (see `decode_payload`); values alias it."""
+    values = np.frombuffer(buf, dtype="<f4", count=k_total)
     indices = _unpack_bits(buf[4 * k_total:], index_bits(d), k_total)
     return values, indices.astype(np.int64)
 
@@ -175,28 +196,34 @@ def encode_payload(p: Payload) -> bytes:
 
 
 def decode_payload(buf: bytes, meta: PayloadMeta, batch_shape) -> Payload:
-    """Inverse of `encode_payload`; returns a Payload of numpy arrays."""
+    """Inverse of `encode_payload`; returns a Payload of numpy arrays.
+
+    `buf` must be exclusively owned by the caller and never mutated after
+    this call: the float leaves are zero-copy `np.frombuffer` views into it
+    (the frame layer hands each payload a fresh body slice, so the hot
+    receive path does one copy — the slice — instead of one per leaf).
+    """
     n = int(np.prod(batch_shape, dtype=np.int64)) if batch_shape else 1
     kind, d, k = meta.kind, meta.d, meta.k
     if kind in ("dense", "slice"):
         w = d if kind == "dense" else k
-        vals = np.frombuffer(buf, dtype="<f4", count=n * w).copy()
+        vals = np.frombuffer(buf, dtype="<f4", count=n * w)
         return Payload(meta=meta, values=vals.reshape(*batch_shape, w))
     if kind == "sparse":
-        vals = np.frombuffer(buf[: 4 * n * k], dtype="<f4").copy()
+        vals = np.frombuffer(buf, dtype="<f4", count=n * k)
         idx = _unpack_bits(buf[4 * n * k:], index_bits(d), n * k)
         return Payload(meta=meta,
                        values=vals.reshape(*batch_shape, k),
                        indices=idx.astype(np.uint16).reshape(*batch_shape, k))
     if kind == "quant":
-        head = np.frombuffer(buf[: 8 * n], dtype="<f4").copy()
+        head = np.frombuffer(buf, dtype="<f4", count=2 * n)
         codes = _unpack_bits(buf[8 * n:], meta.bits, n * d)
         return Payload(meta=meta,
                        values=codes.astype(np.uint8).reshape(*batch_shape, d),
                        header=head.reshape(*batch_shape, 2))
     if kind == "sparse_quant":
         r = index_bits(d)
-        head = np.frombuffer(buf[: 8 * n], dtype="<f4").copy()
+        head = np.frombuffer(buf, dtype="<f4", count=2 * n)
         off = 8 * n
         idx_nbytes = (n * k * r + 7) // 8
         idx = _unpack_bits(buf[off: off + idx_nbytes], r, n * k)

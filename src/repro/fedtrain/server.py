@@ -4,7 +4,9 @@ One reader thread per client connection parses `core.wire` frames into a
 `runtime.batching.BatchingQueue` (the same admission policy the serving
 runtime uses); the single train loop flushes the queue and, for each
 received activation frame in arrival order, decodes the self-described
-payload to the dense cut view (`protocol.server_decode`), runs the top
+payload to the dense cut view ON DEVICE (`protocol.server_decode_device`:
+only the compressed wire leaves cross host->device, the scatter/dequant
+runs under jit), runs the top
 model + loss with an explicit `jax.vjp` — the party boundary is literal,
 no autodiff shortcut through the wire — updates the top optimizer, and
 streams the compressed cut gradient back as a `grad` frame
@@ -108,7 +110,8 @@ class TrainingServer(FrameServerBase):
                         len(sess.last_reply) - sess.last_reply_header)
                 continue
             kept += 1
-            view = jnp.asarray(protocol.server_decode(frame.payload))
+            # device-side decode: the dense cut view never exists on host
+            view = protocol.server_decode_device(frame.payload)
             y = jnp.asarray(self.labels_for(sess.id, frame.seq))
             self.top, self.opt, loss, dview = self._step(
                 self.top, self.opt, view, y)

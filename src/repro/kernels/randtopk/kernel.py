@@ -92,6 +92,31 @@ def _randtopk_mask_kernel(x_ref, g_ref, m_ref, mask_ref, *, k: int):
     mask_ref[...] = sel_top | sel_non
 
 
+def _scatter_rows_kernel(v_ref, i_ref, o_ref, *, k: int):
+    """Per-row sparse scatter: o[r, i[r, j]] = v[r, j] for j < k.
+
+    The decode-side counterpart of the selection kernels: (values, indices)
+    off the wire become the dense cut view without ever leaving the device.
+    No gather/scatter unit is used — each of the k support elements is
+    placed by one branch-free lane-parallel compare-and-select over the
+    VMEM-resident row tile, accumulated in f32 (O(k d) elementwise work,
+    same layout-friendliness as the bisection kernels above). Support
+    indices are unique per row by construction (a top-k support); duplicate
+    indices would *sum* here where XLA's put_along_axis keeps one write.
+    """
+    v = v_ref[...].astype(jnp.float32)                 # (br, k)
+    idx = i_ref[...].astype(jnp.int32)                 # (br, k)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, o_ref.shape, 1)
+
+    def body(j, acc):
+        ij = jax.lax.dynamic_slice_in_dim(idx, j, 1, axis=1)   # (br, 1)
+        vj = jax.lax.dynamic_slice_in_dim(v, j, 1, axis=1)
+        return acc + jnp.where(lanes == ij, vj, 0.0)
+
+    o_ref[...] = jax.lax.fori_loop(
+        0, k, body, jnp.zeros(o_ref.shape, jnp.float32))
+
+
 def _rows_blocks(x, block_rows: int):
     orig_shape = x.shape
     d = orig_shape[-1]
@@ -167,3 +192,39 @@ def randtopk_mask_kernel(x, gumbel, m, k: int, *, block_rows: int = 128,
     if pad:
         mask = mask[:rows]
     return mask.reshape(orig_shape)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("d", "block_rows", "interpret"))
+def scatter_rows_kernel(values, indices, d: int, *, block_rows: int = 128,
+                        interpret: bool = True):
+    """Sparse wire payload -> dense rows, fused on device.
+
+    values  : (..., k) selected values (any float dtype; accumulated f32)
+    indices : (..., k) support indices (uint16/int32)
+    Returns the dense (..., d) scatter with values.dtype, zeros elsewhere.
+    This is the `backend="pallas"` implementation behind the sparse branch
+    of `core.compressors.payload_to_dense` — the decode half that
+    `runtime.server` runs per flush straight into the slot arena.
+    """
+    orig_shape, k, rows, br, pad = _rows_blocks(values, block_rows)
+    assert d <= 16384, "dense row must fit a VMEM row tile"
+    v2 = values.reshape(rows, k)
+    i2 = indices.reshape(rows, k).astype(jnp.int32)
+    if pad:
+        v2 = jnp.pad(v2, ((0, pad), (0, 0)))
+        i2 = jnp.pad(i2, ((0, pad), (0, 0)))
+    grid = (v2.shape[0] // br,)
+
+    dense = pl.pallas_call(
+        functools.partial(_scatter_rows_kernel, k=k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, k), lambda i: (i, 0)),
+                  pl.BlockSpec((br, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((v2.shape[0], d), jnp.float32),
+        interpret=interpret,
+    )(v2, i2)
+    if pad:
+        dense = dense[:rows]
+    return dense.reshape(orig_shape[:-1] + (d,)).astype(values.dtype)

@@ -25,6 +25,19 @@ def topk_mask(x, k: int, *, interpret: bool = True):
     return mask
 
 
+@partial(jax.jit, static_argnames=("d", "interpret"))
+def scatter_rows(values, indices, d: int, *, interpret: bool = True):
+    """Dense (..., d) rows from a sparse (values, indices) wire payload.
+
+    The decode-side kernel: what `sparse_to_dense`/`put_along_axis` does on
+    the host happens in VMEM instead, so a compressed payload is densified
+    only on device (the serving arena's `decode_to_slots` path). Support
+    indices must be unique per row (any top-k support is); duplicates sum.
+    """
+    return kernel.scatter_rows_kernel(values, indices, d,
+                                      interpret=interpret)
+
+
 @partial(jax.jit, static_argnames=("k", "alpha", "interpret"))
 def randtopk_mask(x, k: int, alpha: float, key, *, interpret: bool = True):
     """Kernel-backed Eq. (7) selection mask (fused top-k + Gumbel race)."""

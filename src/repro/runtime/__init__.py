@@ -2,11 +2,14 @@
 
 Layering (bottom up): `core.wire` frames carry `core.payload.Payload`
 bitstreams over `transport` byte channels; `client` runs the bottom model
-and the encode half, `server` batches decodes and runs the vmapped top
-model against per-session KV caches (`batching` queue, `session`
-accounting, `steps` jit-able halves); `engine.run_streaming` wires N
-clients to one server and reports measured bytes per session.
+and the encode half, `server` batches decodes into the device-resident
+session-slot `arena` and runs one donated masked top step over it
+(`batching` queue, `session` accounting, `steps` jit-able halves);
+`engine.run_streaming` wires N clients to one server and reports measured
+bytes per session. The hot-path design lives in docs/performance.md.
 """
+from repro.runtime import steps
+from repro.runtime.arena import SlotArena
 from repro.runtime.batching import BatchingQueue
 from repro.runtime.client import StreamingClient
 from repro.runtime.engine import run_streaming
@@ -14,5 +17,6 @@ from repro.runtime.server import StreamingServer
 from repro.runtime.session import Session, SessionStats
 from repro.runtime.transport import Endpoint, channel_pair
 
-__all__ = ["BatchingQueue", "StreamingClient", "StreamingServer", "Session",
-           "SessionStats", "Endpoint", "channel_pair", "run_streaming"]
+__all__ = ["BatchingQueue", "SlotArena", "StreamingClient", "StreamingServer",
+           "Session", "SessionStats", "Endpoint", "channel_pair",
+           "run_streaming", "steps"]

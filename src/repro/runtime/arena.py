@@ -1,0 +1,86 @@
+"""Device-resident session-slot arena — the serving runtime's hot state.
+
+Every admitted session owns one *slot*: a fixed row of pre-allocated batched
+KV-cache/position arrays (`cache`, every leaf stacked over a leading
+capacity axis) and of the cut-activation staging buffer (`xbuf`). The slot
+is assigned at admission and never moves, so the serve loop's per-flush work
+is: scatter-decode the flush's payloads into `xbuf[slots]` on device, run
+ONE jitted top step over the whole arena with an active-slot mask, read the
+token rows back. Nothing per-session is stacked, unstacked, or pulled to
+host — the O(sessions x cache bytes) of per-flush `jnp.stack`/`a[i]` memcpy
+the pre-arena server paid per token is gone, and with buffer donation the
+step updates the arena in place.
+
+Aliasing/donation invariants (also in docs/performance.md):
+
+  * `cache` and `xbuf` handles are CONSUMED by the donated jits
+    (`steps.make_arena_top_step`, `protocol.server_decode_to_slots`); the
+    owner must always rebind the returned arrays and never keep a stale
+    reference across a flush.
+  * `xbuf` has `capacity + 1` rows: row `capacity` is the scratch row that
+    group padding scatters into (a cached zero row, NEVER an alias of a
+    live session's data), keeping one compile per payload meta regardless
+    of flush fill.
+  * inactive slots pass through the top step unchanged (the mask selects
+    the old leaf), so stale `xbuf` rows from earlier flushes are never
+    observable.
+
+Slot lifecycle is owned by the server (admission assigns the next free
+slot id; when none is free the slot of a *closed* session is reclaimed and
+a `reset_slot` — cache rows back to the fresh-session template — is queued
+for the serve loop to apply before the next flush touches the arena), so
+resets are serialized with the donated step, never raced against it from a
+reader thread. The arena itself holds only the device state.
+"""
+from __future__ import annotations
+
+import functools
+import warnings
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# donation is a no-op on the CPU backend (jax warns once per compile);
+# the arena is designed for TPU where it aliases in place
+warnings.filterwarnings("ignore",
+                        message="Some donated buffers were not usable")
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _reset_slot(cache, template, slot):
+    """Write the fresh-session template back into one arena row (donated)."""
+    return jax.tree.map(lambda a, t: a.at[slot].set(t), cache, template)
+
+
+class SlotArena:
+    """Pre-allocated per-session serving state, resident on device.
+
+    `make_cache() -> batch-1 cache pytree` defines one slot's state;
+    `x_shape`/`x_dtype` the per-slot cut-activation row. Slot id assignment
+    lives with the owning server (it is session bookkeeping); the arena
+    holds the device arrays and the reset primitive, and `reset_slot` must
+    only run from the thread that owns the donated step (see module
+    docstring).
+    """
+
+    def __init__(self, make_cache, capacity: int, x_shape, x_dtype):
+        assert capacity >= 1
+        self.capacity = capacity
+        self._template = make_cache()
+        self.cache = jax.tree.map(lambda a: jnp.stack([a] * capacity),
+                                  self._template)
+        # +1: the scratch row that padded decode groups scatter into
+        self.xbuf = jnp.zeros((capacity + 1,) + tuple(x_shape), x_dtype)
+
+    def reset_slot(self, slot: int) -> None:
+        """Restore one row to the fresh-session template (slot reuse after
+        a session closed). Must only run from the thread that owns the
+        donated step — it consumes and rebinds `cache`."""
+        self.cache = _reset_slot(self.cache, self._template,
+                                 jnp.asarray(slot, jnp.int32))
+
+    def slot_cache(self, slot: int) -> Any:
+        """Host copy of one slot's cache row (tests/debug only — the serve
+        path never unstacks a slot)."""
+        return jax.tree.map(lambda a: jax.device_get(a[slot]), self.cache)

@@ -17,6 +17,7 @@ byte-identical to the pre-ARQ loop.
 """
 from __future__ import annotations
 
+import time
 from typing import Callable, Optional
 
 import jax
@@ -51,6 +52,7 @@ class StreamingClient(ArqClientMixin):
         self.reconnect = reconnect              # () -> fresh endpoint
         self.stats = SessionStats()
         self.generated: list = []
+        self.latencies: list = []       # per-step send->reply seconds
         self.error: Optional[BaseException] = None
 
     def _count_reply(self, reply: wire.Frame) -> None:
@@ -73,12 +75,14 @@ class StreamingClient(ArqClientMixin):
                                                    token)
             payload = jax.tree.map(np.asarray, payload)  # device -> host
             frame_bytes = wire.encode_payload_frame(self.id, step, payload)
+            t_send = time.perf_counter()
             self.endpoint.send(frame_bytes)
             hb = wire.payload_frame_header_nbytes(payload)
             self.stats.count_up(header_nbytes=hb,
                                 payload_nbytes=len(frame_bytes) - hb)
 
             reply = self._await_reply(step, frame_bytes, hb)
+            self.latencies.append(time.perf_counter() - t_send)
             nxt = int(reply.tokens[0])
             if step + 1 < len(self.prompt):
                 token = np.asarray([[self.prompt[step + 1]]], np.int32)

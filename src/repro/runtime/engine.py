@@ -72,9 +72,13 @@ def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
     bottom_steps = {c: jax.jit(steps.make_bottom_step(cfg, rt, cut, c))
                     for c in dict.fromkeys(comps)}
     make_cache = lambda: transformer.init_cache(params, cfg, rt, 1, max_len)
-    server = StreamingServer(params, steps.make_top_step(cfg, rt, cut),
+    # every session owns a device-resident arena slot for its whole life,
+    # so capacity = the expected concurrent session count
+    server = StreamingServer(params, steps.make_arena_top_step(cfg, rt, cut),
                              make_cache, max_batch=max_batch,
-                             max_wait=max_wait, dtype=cfg.adtype())
+                             max_wait=max_wait, dtype=cfg.adtype(),
+                             capacity=n_clients,
+                             x_shape=(1, 1, cfg.d_model))
     server.expected_sessions = n_clients
 
     prompts = np.asarray(jax.random.randint(
@@ -97,16 +101,13 @@ def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
             retry_timeout=retry_timeout, max_retries=max_retries,
             reconnect=lambda cid=cid: _connect(cid)))
 
-    # warm both steps up BEFORE spawning threads: one compile, not a storm
+    # warm every hot-loop jit BEFORE spawning threads (one compile, not a
+    # storm — and the serving clock never pays compile time): bottom steps,
+    # then the server's per-meta slot decodes + the donated arena step
     tok0 = np.zeros((1, 1), np.int32)
     dummy = {c: step(params, make_cache(), tok0)
              for c, step in bottom_steps.items()}
-    x0, cache0 = next(iter(dummy.values()))
-    x0 = np.asarray(protocol.server_decode(
-        jax.tree.map(np.asarray, x0), dtype=cfg.adtype()))
-    server.top_step(params, jax.numpy.asarray(
-        np.stack([x0] * max_batch)),
-        jax.tree.map(lambda *a: jax.numpy.stack(a), *([cache0] * max_batch)))
+    server.warm([jax.tree.map(np.asarray, p) for p, _ in dummy.values()])
 
     t0 = time.perf_counter()
     serve_thread = threading.Thread(target=server.serve_loop, daemon=True)
@@ -139,6 +140,11 @@ def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
         "compressor_objs": comps,
         "batch_sizes": server.batch_sizes,
         "fault_counters": fault_summary(server, clients),
+        # serve-loop wall seconds by stage (payload-group prep + device
+        # decode dispatch / donated arena step incl. token readback / reply
+        # framing+send) and per-client request->token round-trip latencies
+        "stage_s": dict(server.stage_s),
+        "client_latencies": [list(c.latencies) for c in clients],
         "wall_s": wall,
         "tokens_per_s": tokens.size / max(wall, 1e-9),
         "n_clients": n_clients,

@@ -2,12 +2,25 @@
 
 One reader thread per connection parses `core.wire` frames off the byte
 transport and feeds a `BatchingQueue`; the single serve loop flushes the
-queue under the max-batch/max-wait policy, decodes each payload *batch* once
-(grouped by payload meta, so a mixed dense/randtopk client population still
-gets batched decodes), and runs one vmapped top-model step over the whole
-flush — every session row against its own KV cache and position. Token
-replies stream back as frames; per-session byte accounting is taken from the
-real frame sizes at receipt.
+queue under the max-batch/max-wait policy and drives the device-resident
+session-slot arena (`runtime.arena.SlotArena`):
+
+  * each session is pinned to one arena slot at admission — its KV cache
+    and position are rows of pre-allocated batched device arrays for the
+    session's whole life (reconnects keep the slot; a closed session's slot
+    is reset and reused);
+  * each flush, payloads are grouped by meta and scatter-decoded ON DEVICE
+    straight into the arena's cut-activation buffer rows
+    (`protocol.server_decode_to_slots`, padded to `max_batch` onto a cached
+    zero scratch row so each meta compiles once) — the host touches only
+    the compressed wire leaves, never a dense activation;
+  * one donated jitted top step runs over the WHOLE arena with an
+    active-slot mask — zero per-flush cache stack/unstack, inactive slots
+    pass through unchanged — and only the token rows come back to host.
+
+Token replies stream back as frames; per-session byte accounting is taken
+from the real frame sizes at receipt. The hot-path design and its
+donation/aliasing invariants are documented in docs/performance.md.
 
 Fault tolerance: a malformed frame (typed `wire.WireError` — CRC failure,
 bad counts, truncation) no longer kills a reader thread silently. The reader
@@ -20,7 +33,8 @@ without re-running the top-model step, so a KV cache never double-advances.
 from __future__ import annotations
 
 import threading
-from typing import Callable, Dict, List
+import time
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +42,7 @@ import numpy as np
 
 from repro.core import wire
 from repro.core.payload import Payload
+from repro.runtime.arena import SlotArena
 from repro.runtime.batching import BatchingQueue
 from repro.runtime.session import Session
 from repro.split import protocol
@@ -158,20 +173,60 @@ class FrameServerBase:
 
 
 class StreamingServer(FrameServerBase):
-    """Top-model serving engine over framed byte channels."""
+    """Top-model serving engine over framed byte channels.
+
+    `top_step` must be an arena-shaped step (`steps.make_arena_top_step`):
+    it is jitted here with the arena cache DONATED, so every flush updates
+    the slot arrays in place. `capacity` bounds concurrently-open sessions
+    (a closed session's slot is reclaimed for the next admission); the
+    engine sets it to the expected client count.
+    """
 
     def __init__(self, params, top_step: Callable, make_cache: Callable,
                  *, max_batch: int = 8, max_wait: float = 0.01,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, capacity: Optional[int] = None,
+                 x_shape=None, backend: Optional[str] = None):
         self.params = params
-        self.top_step = jax.jit(top_step)
-        self.make_cache = make_cache        # () -> fresh batch-1 cache pytree
+        self.top_step = jax.jit(top_step, donate_argnums=(2,))
         self.dtype = dtype
+        self.backend = backend              # sparse-decode backend dispatch
         self.batch_sizes: List[int] = []    # flush fill history
+        self.stage_s = {"decode": 0.0, "step": 0.0, "reply": 0.0}
         self._init_connections(BatchingQueue(max_batch, max_wait))
+        self.arena: Optional[SlotArena] = None
+        self._make_cache = make_cache
+        self._capacity = capacity or max_batch
+        if x_shape is not None:             # else: built lazily from the
+            self.arena = SlotArena(make_cache, self._capacity, x_shape,
+                                   dtype)    # first payload's meta.d
+        self._free_slots: List[int] = list(range(self._capacity))
+        self._pending_resets: List[int] = []    # applied by the serve loop
+        self._pad_rows: Dict = {}           # cached zero pad rows, per shape
+
+    def _ensure_arena(self, d: int) -> None:
+        if self.arena is None:
+            self.arena = SlotArena(self._make_cache, self._capacity,
+                                   (1, 1, d), self.dtype)
 
     def _new_session(self, sid: int, endpoint) -> Session:
-        return Session(id=sid, cache=self.make_cache(), endpoint=endpoint)
+        # called under self._lock (from _session_for)
+        if self._free_slots:
+            slot = self._free_slots.pop(0)
+        else:
+            # reclaim the slot of a closed session; the reset is applied by
+            # the serve loop (never raced against the donated step)
+            slot = None
+            for sess in self.sessions.values():
+                if sess.closed and sess.slot >= 0:
+                    slot, sess.slot = sess.slot, -1
+                    self._pending_resets.append(slot)
+                    break
+            if slot is None:
+                raise RuntimeError(
+                    f"session {sid}: arena full ({self._capacity} slots, "
+                    f"none closed) — raise `capacity` to the expected "
+                    f"session count")
+        return Session(id=sid, slot=slot, endpoint=endpoint)
 
     # -- serving -------------------------------------------------------------
 
@@ -183,6 +238,25 @@ class StreamingServer(FrameServerBase):
                 self._process(batch)
             elif self.queue.drained:
                 return
+
+    def warm(self, example_payloads) -> None:
+        """Compile every hot-loop jit before the serving clock starts.
+
+        For each example payload (one per distinct client compressor,
+        encoded from a probe activation) runs the padded group decode
+        aimed entirely at the scratch row, then one all-inactive arena
+        step — shapes match the serve path exactly, no session state is
+        perturbed, and the first real flush pays zero compile time.
+        """
+        for p in example_payloads:
+            self._ensure_arena(p.meta.d)
+            group = [p] * self.queue.max_batch
+            slots = np.full(len(group), self.arena.capacity, np.int64)
+            self._decode_group(p.meta, group, slots)
+        active = jnp.zeros((self.arena.capacity,), bool)
+        tokens, self.arena.cache = self.top_step(
+            self.params, self.arena.xbuf, self.arena.cache, active)
+        jax.block_until_ready(tokens)
 
     def _dedup(self, items) -> List:
         """Stop-and-wait ARQ filter: the client never has two frames in
@@ -203,38 +277,85 @@ class StreamingServer(FrameServerBase):
                 sess.stats.count_down(len(sess.last_reply))
         return fresh
 
+    def _pad_row(self, like: np.ndarray) -> np.ndarray:
+        """Cached zero pad row for ragged decode groups. Pad rows scatter
+        into the arena's scratch slot and are NEVER an alias of a live
+        session's arrays (the pre-arena loop duplicated items[0]'s cache
+        reference into pad slots — a stale-aliasing footgun this template
+        removes)."""
+        key = (like.shape, like.dtype.str)
+        row = self._pad_rows.get(key)
+        if row is None:
+            row = self._pad_rows[key] = np.zeros(like.shape, like.dtype)
+        return row
+
+    def _decode_group(self, meta, group, slots: np.ndarray) -> None:
+        """Scatter-decode one meta-group of payloads into the arena rows
+        `slots`, on device. The group is padded to `max_batch` (zero rows
+        aimed at the scratch slot) so each payload meta compiles exactly
+        once; the host only stacks the compressed wire leaves — the dense
+        view never exists host-side. `xbuf` is donated and rebound."""
+        pad = self.queue.max_batch - len(group)
+        leaves = {}
+        for name, _ in group[0].wire_leaves():
+            rows = [np.asarray(getattr(p, name)) for p in group]
+            if pad:
+                rows.extend([self._pad_row(rows[0])] * pad)
+            leaves[name] = np.stack(rows)
+        if pad:
+            slots = np.concatenate(
+                [slots, np.full(pad, self.arena.capacity, np.int64)])
+        stacked = Payload(meta=meta, **leaves)
+        self.arena.xbuf = protocol.server_decode_to_slots(
+            self.arena.xbuf, stacked, slots, dtype=self.dtype,
+            backend=self.backend)
+
     def _process(self, items) -> None:
         items = self._dedup(items)
+        with self._lock:
+            resets, self._pending_resets = self._pending_resets, []
+            # a reclaimed slot means the session closed; any straggler
+            # frame has no device state left and is dropped. The slot is
+            # SNAPSHOTTED under the same lock: a reader thread admitting a
+            # new session may reclaim a closed session's slot at any
+            # moment, and a slot flipping to -1 between the filter and the
+            # mask build would corrupt another live slot's row.
+            items = [(s, f, s.slot) for s, f in items if s.slot >= 0]
+        if items:
+            self._ensure_arena(items[0][1].payload.meta.d)
+        if self.arena is not None:
+            for slot in resets:             # serialized with the step here
+                self.arena.reset_slot(slot)
         if not items:
             return
         self.batch_sizes.append(len(items))
-        xs: List = [None] * len(items)
+        t0 = time.perf_counter()
         by_meta: Dict = {}
-        for i, (_, frame) in enumerate(items):
+        for i, (_, frame, _slot) in enumerate(items):
             by_meta.setdefault(frame.payload.meta, []).append(i)
-        # decode each payload batch ONCE: stack wire leaves across sessions
         for meta, idxs in by_meta.items():
-            leaves = {
-                name: np.stack(
-                    [getattr(items[i][1].payload, name) for i in idxs])
-                for name, _ in items[idxs[0]][1].payload.wire_leaves()}
-            stacked = Payload(meta=meta, **leaves)
-            dense = np.asarray(protocol.server_decode(stacked,
-                                                      dtype=self.dtype))
-            for row, i in enumerate(idxs):
-                xs[i] = dense[row]
-        # pad the flush to max_batch so the vmapped step compiles once
-        pad = self.queue.max_batch - len(items)
-        caches = [sess.cache for sess, _ in items] + \
-                 [items[0][0].cache] * pad
-        xs = xs + [xs[0]] * pad
-        cache_stack = jax.tree.map(lambda *a: jnp.stack(a), *caches)
-        tokens, new_caches = self.top_step(self.params, jnp.asarray(
-            np.stack(xs)), cache_stack)
+            self._decode_group(
+                meta, [items[i][1].payload for i in idxs],
+                np.fromiter((items[i][2] for i in idxs), np.int64,
+                            len(idxs)))
+        active = np.zeros(self.arena.capacity, bool)
+        for _, _, slot in items:
+            active[slot] = True
+        t1 = time.perf_counter()
+        # ONE donated step over the whole arena: no cache stack/unstack,
+        # only the (capacity, 1) token rows come back to host
+        tokens, self.arena.cache = self.top_step(
+            self.params, self.arena.xbuf, self.arena.cache,
+            jnp.asarray(active))
         tokens = np.asarray(tokens)
-        for i, (sess, frame) in enumerate(items):
-            sess.cache = jax.tree.map(lambda a, i=i: a[i], new_caches)
-            reply = wire.encode_token_frame(sess.id, frame.seq, tokens[i])
+        t2 = time.perf_counter()
+        for sess, frame, slot in items:
+            reply = wire.encode_token_frame(sess.id, frame.seq,
+                                            tokens[slot])
             sess.last_seq, sess.last_reply = frame.seq, reply
             sess.endpoint.send(reply)
             sess.stats.count_down(len(reply))
+        t3 = time.perf_counter()
+        self.stage_s["decode"] += t1 - t0
+        self.stage_s["step"] += t2 - t1
+        self.stage_s["reply"] += t3 - t2

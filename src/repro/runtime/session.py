@@ -77,16 +77,20 @@ class SessionStats:
 
 @dataclasses.dataclass
 class Session:
-    """Server-side view of one client: its top-model cache + accounting.
+    """Server-side view of one client: its arena slot + accounting.
 
-    `cache` is a full `transformer.init_cache(batch=1)` pytree of which only
-    the top-layer slice is ever read or written by the serving step; `pos`
-    lives inside it, so sessions at different depths batch together (the top
-    step is vmapped over sessions, giving each row its own positions).
+    `slot` indexes the server's device-resident `runtime.arena.SlotArena`:
+    the session's KV cache and position live in row `slot` of the arena's
+    stacked arrays for the session's whole life (assigned at admission,
+    surviving reconnects, reset only when the slot is reclaimed after
+    close). -1 means no device state — training sessions, or a slot already
+    reclaimed. The pre-arena per-session host `cache` pytree is gone: the
+    serve loop never holds a per-session cache on host.
     """
 
     id: int
-    cache: Any
+    slot: int = -1                      # arena row; -1 = none/reclaimed
+    cache: Any = None                   # legacy/off-arena state (fedtrain)
     endpoint: Any = None                # server->client reply half (latest
     #                                     connection — updated on reconnect)
     stats: SessionStats = dataclasses.field(default_factory=SessionStats)

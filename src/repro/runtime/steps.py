@@ -60,7 +60,11 @@ def make_bottom_step(cfg: ArchConfig, rt: Runtime, cut: int,
 def make_top_step(cfg: ArchConfig, rt: Runtime, cut: int) -> Callable:
     """Vmapped server step: (params, x (S,1,1,d), caches stacked over S) ->
     (tokens (S,1) i32, new caches). One compile serves every batch; padded
-    rows (batch fill) are computed and discarded."""
+    rows (batch fill) are computed and discarded.
+
+    This is the pre-arena flush-shaped step, kept as the reference
+    implementation the arena parity tests pin against (`make_arena_top_step`
+    is the serving hot path)."""
 
     def one_session(params, x, cache):
         x, partial = transformer.decode_layers(params, cfg, rt, x, cache,
@@ -70,3 +74,36 @@ def make_top_step(cfg: ArchConfig, rt: Runtime, cut: int) -> Callable:
         return tok, _merge_range(cache, partial, prefix=False)
 
     return jax.vmap(one_session, in_axes=(None, 0, 0))
+
+
+def make_arena_top_step(cfg: ArchConfig, rt: Runtime, cut: int) -> Callable:
+    """Whole-arena server step with an active-slot mask.
+
+    (params, xbuf (C+1, 1, 1, d), cache arena stacked over C, active (C,)
+    bool) -> (tokens (C, 1) i32, new arena). Row i of the arena is session
+    slot i; `xbuf`'s trailing scratch row (the decode-group pad target) is
+    sliced off before the step. Inactive slots compute and discard — their
+    new cache leaves are `where(active, new, old)`, so position/KV never
+    advance for a slot that received no frame this flush, and the output
+    arena aliases the donated input in place under
+    `jax.jit(..., donate_argnums=(2,))` (see `runtime.server`).
+
+    Per-row numerics are identical to `make_top_step` (same vmapped body),
+    so arena-served tokens are bit-identical to the flush-stacked path.
+    """
+
+    def one_session(params, x, cache, active):
+        x, partial = transformer.decode_layers(params, cfg, rt, x, cache,
+                                               cut, cfg.n_layers)
+        logits = transformer.lm_head(params, cfg, rt, x)
+        tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        new = _merge_range(cache, partial, prefix=False)
+        new = jax.tree.map(lambda n, o: jnp.where(active, n, o), new, cache)
+        return tok, new
+
+    vstep = jax.vmap(one_session, in_axes=(None, 0, 0, 0))
+
+    def arena_step(params, xbuf, cache, active):
+        return vstep(params, xbuf[: active.shape[0]], cache, active)
+
+    return arena_step

@@ -18,6 +18,8 @@ docs/protocol.md — the normative companion of this module.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
@@ -147,6 +149,13 @@ def _transport(comp: compressors.Compressor, x, rt: Runtime, key,
 # same jit program (streaming clients/servers, real sockets).
 # ---------------------------------------------------------------------------
 
+#: host-side dense materializations performed by `server_decode` — the
+#: serving/training hot paths must keep this flat (they decode on device via
+#: `server_decode_device` / `server_decode_to_slots`); tests snapshot it
+#: around an engine run to pin "zero host-side densification".
+HOST_DENSIFY_COUNT = 0
+
+
 def client_encode(comp: compressors.Compressor, x, *, key=None,
                   training: bool = False) -> Payload:
     """Feature-owner half: compress a cut activation to a host Payload.
@@ -168,8 +177,60 @@ def server_decode(p: Payload, *, dtype=None):
     Dispatches on `p.meta.kind` only (`compressors.payload_to_dense`) — the
     server needs no compressor object and no per-session codec state; the
     frame's subheader fully describes the payload.
+
+    This is the *host-side* decode (counted in `HOST_DENSIFY_COUNT`): fine
+    for warmup probes, tests, and one-off decodes. The serving/training hot
+    loops use `server_decode_device` / `server_decode_to_slots` instead, so
+    only the compressed wire leaves ever cross host->device.
     """
+    global HOST_DENSIFY_COUNT
+    HOST_DENSIFY_COUNT += 1
     return compressors.payload_to_dense(p, dtype=dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "backend"))
+def _decode_device_jit(p: Payload, *, dtype: str, backend):
+    return compressors.payload_to_dense(p, dtype=jnp.dtype(dtype),
+                                        backend=backend)
+
+
+def server_decode_device(p: Payload, *, dtype=None, backend=None):
+    """`server_decode`, but the densification happens on device under jit.
+
+    The host moves only the payload's wire leaves (k floats + packed
+    indices, not the dense tensor) to the device; the scatter/dequant runs
+    compiled (Pallas scatter kernel or XLA `put_along_axis` per `backend`).
+    Jit caches by (meta, leaf shapes, dtype, backend) — one compile per
+    distinct payload meta. Bit-identical to `server_decode`.
+    """
+    dt = jnp.dtype(dtype or jnp.float32).name
+    return _decode_device_jit(p, dtype=dt, backend=backend)
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "backend"),
+                   donate_argnums=(0,))
+def _decode_to_slots_jit(xbuf, p: Payload, slots, *, dtype: str, backend):
+    rows = compressors.payload_to_dense(p, dtype=jnp.dtype(dtype),
+                                        backend=backend)
+    return xbuf.at[slots].set(rows)
+
+
+def server_decode_to_slots(xbuf, p: Payload, slots, *, dtype=None,
+                           backend=None):
+    """Device/slot variant of `server_decode`: decode a *stacked* payload
+    (leading batch axis = flush rows) and scatter the dense rows straight
+    into `xbuf[slots]` — the serving arena's cut-activation buffer.
+
+    `xbuf` is DONATED: the caller must treat its handle as consumed and keep
+    the returned array (on TPU the update is in place; no (S, ..., d) dense
+    staging array exists on the host at any point). `slots` maps flush row i
+    -> arena slot; rows padded onto a scratch slot are how the server keeps
+    one compile per payload meta. Jit caches by (meta, shapes, dtype,
+    backend).
+    """
+    dt = jnp.dtype(dtype or jnp.float32).name
+    return _decode_to_slots_jit(xbuf, p, jnp.asarray(slots, jnp.int32),
+                                dtype=dt, backend=backend)
 
 
 def server_grad_encode(p: Payload, g) -> Payload:

@@ -1,0 +1,282 @@
+"""Session-slot arena: device-side decode parity with the host-densify
+path for every payload kind, zero host-side densification on the serving
+and training hot paths, slot stability under chaos/reconnect, slot reuse
+after close, and the active-mask no-advance invariant."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.core import compressors as C
+from repro.core import wire
+from repro.models import transformer
+from repro.models.config import Runtime, SplitConfig
+from repro.runtime import run_streaming, steps
+from repro.runtime.server import StreamingServer
+from repro.split import protocol
+from repro.testing import FaultInjector, FaultPlan
+
+KIND_COMPRESSORS = [
+    ("dense", C.make_compressor("identity")),
+    ("slice", C.make_compressor("size_reduction", k=6)),
+    ("sparse", C.make_compressor("randtopk", k=6)),
+    ("quant", C.make_compressor("quant", bits=4)),
+    ("sparse_quant", C.make_compressor("randtopk_quant", k=6, bits=8)),
+]
+
+
+def _smoke_cfg(**split_kw):
+    split = SplitConfig(cut_layer=1, **split_kw) if split_kw else None
+    return configs.get("qwen3-8b", smoke=True).with_(split=split)
+
+
+def _wire_payload(comp, x):
+    """Encode + full frame round trip — exactly what the server receives."""
+    p = protocol.client_encode(comp, x, key=jax.random.key(0), training=True)
+    frame, _ = wire.decode_frame(wire.encode_payload_frame(0, 0, p))
+    return frame.payload
+
+
+# ---------------------------------------------------------------------------
+# Decode parity: device/slot decode == host densify, for every payload kind
+# ---------------------------------------------------------------------------
+
+def _assert_decode_match(kind, host, dev):
+    """Sparse/dense/slice decode carries wire floats verbatim — bit-exact
+    in every mode. Quant dequant is a multiply-add the compiled path may
+    contract into an FMA, so compiled-vs-eager is pinned to <= 1 ulp (and
+    test_arena_tokens_match_host_densify_path pins that served tokens do
+    not move at all)."""
+    if kind in ("quant", "sparse_quant"):
+        # one rounding of the (code + 0.5) * step product: bounded by the
+        # ulp at the largest decoded magnitude
+        atol = float(np.spacing(np.float32(np.abs(host).max())))
+        np.testing.assert_allclose(dev, host, rtol=0, atol=atol)
+    else:
+        np.testing.assert_array_equal(host, dev)
+
+
+@pytest.mark.parametrize("kind,comp", KIND_COMPRESSORS,
+                         ids=[k for k, _ in KIND_COMPRESSORS])
+def test_device_decode_matches_host_decode(kind, comp):
+    x = jnp.asarray(np.random.RandomState(1).randn(3, 1, 32).astype(
+        np.float32))
+    p = _wire_payload(comp, x)
+    assert p.meta.kind == kind
+    host = np.asarray(protocol.server_decode(p))
+    dev = np.asarray(protocol.server_decode_device(p))
+    _assert_decode_match(kind, host, dev)
+
+
+@pytest.mark.parametrize("kind,comp", KIND_COMPRESSORS,
+                         ids=[k for k, _ in KIND_COMPRESSORS])
+def test_slot_decode_matches_host_decode(kind, comp):
+    """Scatter-decode into arena rows == host densify, row for row; rows
+    not targeted keep their prior contents; the scratch row absorbs pads."""
+    n, d, cap = 3, 32, 5
+    x = jnp.asarray(np.random.RandomState(2).randn(n, 1, 1, d).astype(
+        np.float32))
+    p = _wire_payload(comp, x)
+    host = np.asarray(protocol.server_decode(p))
+    xbuf = jnp.full((cap + 1, 1, 1, d), 7.0, jnp.float32)
+    slots = np.array([4, 0, 2])
+    out = np.asarray(protocol.server_decode_to_slots(xbuf, p, slots))
+    for row, slot in enumerate(slots):
+        _assert_decode_match(kind, host[row], out[slot])
+    for untouched in (1, 3, 5):
+        np.testing.assert_array_equal(out[untouched], 7.0)
+
+
+def test_scatter_rows_pallas_matches_xla():
+    """The Pallas scatter kernel (interpret) == put_along_axis for unique
+    supports, across shapes and d not a multiple of the lane width."""
+    rng = np.random.RandomState(3)
+    for shape, d in [((4, 8), 32), ((2, 3, 5), 70), ((1, 1, 1, 16), 256)]:
+        k = shape[-1]
+        vals = rng.randn(*shape).astype(np.float32)
+        idx = np.stack([rng.choice(d, k, replace=False)
+                        for _ in range(int(np.prod(shape[:-1])))])
+        idx = idx.reshape(shape).astype(np.uint16)
+        meta = C.PayloadMeta("sparse", d=d, k=k)
+        p = C.Payload(meta=meta, values=jnp.asarray(vals),
+                      indices=jnp.asarray(idx))
+        ref = np.asarray(C.payload_to_dense(p, backend="xla"))
+        got = np.asarray(C.payload_to_dense(p, backend="pallas"))
+        np.testing.assert_array_equal(ref, got)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: arena-served tokens == the pre-arena host-densify serve loop
+# ---------------------------------------------------------------------------
+
+def _reference_tokens(cfg, params, comp, prompts, gen):
+    """The pre-arena serving semantics, replayed single-file: bottom step ->
+    wire round trip -> HOST densify (`server_decode`) -> flush-shaped
+    vmapped top step (`make_top_step`) with a stacked/unstacked cache."""
+    rt = Runtime(mesh=None, training=False)
+    cut = cfg.split.cut_layer if cfg.split else max(1, cfg.n_layers // 2)
+    bottom = jax.jit(steps.make_bottom_step(cfg, rt, cut, comp))
+    top = jax.jit(steps.make_top_step(cfg, rt, cut))
+    prompt_len = prompts.shape[1]
+    out = []
+    for row in range(prompts.shape[0]):
+        cache_b = transformer.init_cache(params, cfg, rt, 1, prompt_len + gen)
+        cache_t = transformer.init_cache(params, cfg, rt, 1, prompt_len + gen)
+        token = np.asarray([[prompts[row, 0]]], np.int32)
+        toks = []
+        for step in range(prompt_len + gen - 1):
+            p, cache_b = bottom(params, cache_b, token)
+            p = jax.tree.map(np.asarray, p)
+            frame, _ = wire.decode_frame(
+                wire.encode_payload_frame(row, step, p))
+            x = np.asarray(protocol.server_decode(frame.payload,
+                                                  dtype=cfg.adtype()))
+            stacked = jax.tree.map(lambda a: a[None], cache_t)
+            tok, new_stacked = top(params, jnp.asarray(x[None]), stacked)
+            cache_t = jax.tree.map(lambda a: a[0], new_stacked)
+            nxt = int(np.asarray(tok)[0, 0])
+            if step + 1 < prompt_len:
+                token = np.asarray([[prompts[row, step + 1]]], np.int32)
+            else:
+                toks.append(nxt)
+                token = np.asarray([[nxt]], np.int32)
+        out.append(toks)
+    return np.asarray(out, np.int32)
+
+
+@pytest.mark.parametrize("spec", ["identity", "size_reduction:k=8",
+                                  "randtopk:k=8", "quant:bits=4",
+                                  "randtopk_quant:k=8,bits=8"])
+def test_arena_tokens_match_host_densify_path(spec):
+    """Slot-decoded, arena-stepped tokens are bit-identical to the old
+    host-densify + stack/unstack serve loop, for every payload kind."""
+    cfg = _smoke_cfg(compressor="randtopk", k=8)
+    params = transformer.init_model(jax.random.key(0), cfg)
+    prompt_len, gen, n = 2, 4, 2
+    res = run_streaming(cfg, n_clients=n, prompt_len=prompt_len, gen=gen,
+                        max_batch=n, params=params, seed=0,
+                        compressor_mix=[spec])
+    prompts = np.asarray(jax.random.randint(
+        jax.random.key(1), (n, prompt_len), 0, cfg.vocab))
+    comp = C.make_compressor(spec)
+    ref = _reference_tokens(cfg, params, comp, prompts, gen)
+    np.testing.assert_array_equal(res["tokens"], ref)
+
+
+# ---------------------------------------------------------------------------
+# Zero host-side densification on the hot paths
+# ---------------------------------------------------------------------------
+
+def test_streaming_serves_without_host_densify():
+    """A full mixed-kind serving run performs ZERO host-side dense
+    materializations (`protocol.server_decode` stays untouched) and keeps
+    no per-session host cache — sessions own arena slots instead."""
+    cfg = _smoke_cfg(compressor="randtopk", k=8)
+    params = transformer.init_model(jax.random.key(0), cfg)
+    before = protocol.HOST_DENSIFY_COUNT
+    res = run_streaming(cfg, n_clients=4, prompt_len=2, gen=4, max_batch=4,
+                        params=params,
+                        compressor_mix=["identity", "randtopk:k=8",
+                                        "quant:bits=4",
+                                        "randtopk_quant:k=8,bits=8"])
+    assert protocol.HOST_DENSIFY_COUNT == before
+    assert res["tokens"].shape == (4, 4)
+
+
+def test_fedtrain_trains_without_host_densify():
+    from repro.data.synthetic import ManyClassDataset
+    from repro.fedtrain import run_fedtrain
+    from repro.split.tabular import SplitSpec
+
+    ds = ManyClassDataset(n_classes=10, in_dim=16, n_train=256, n_test=128,
+                          noise=0.3, seed=0)
+    spec = SplitSpec(in_dim=16, hidden=32, cut_dim=32, n_classes=10,
+                     method="randtopk", k=3)
+    before = protocol.HOST_DENSIFY_COUNT
+    r = run_fedtrain(spec, ds, n_clients=1, epochs=1, batch=64, seed=0)
+    assert protocol.HOST_DENSIFY_COUNT == before
+    assert r["steps"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Slot lifecycle: stability under chaos, reuse after close, full-arena error
+# ---------------------------------------------------------------------------
+
+def test_slots_survive_reconnect_without_double_advance():
+    """Chaos (corrupt/drop/duplicate + ARQ retransmission) forces replays
+    and reconnects; sessions keep their arena slot throughout and the KV
+    cache never double-advances — tokens stay bit-identical to the clean
+    run."""
+    cfg = _smoke_cfg(compressor="randtopk", k=8)
+    params = transformer.init_model(jax.random.key(0), cfg)
+    kw = dict(n_clients=3, prompt_len=2, gen=4, max_batch=2, params=params,
+              seed=0)
+    clean = run_streaming(cfg, **kw)
+
+    inj = FaultInjector(FaultPlan(seed=7, corrupt=0.04, drop=0.04,
+                                  duplicate=0.05, max_faults=24))
+    chaos = run_streaming(cfg, wrap_endpoint=inj, retry_timeout=0.2, **kw)
+    fc = chaos["fault_counters"]
+    assert sum(inj.injected().values()) > 0
+    assert fc["replays"] + fc["duplicates"] + fc["reconnects"] > 0
+    np.testing.assert_array_equal(clean["tokens"], chaos["tokens"])
+
+
+def _server(capacity, max_batch=2):
+    cfg = _smoke_cfg(compressor="randtopk", k=8)
+    params = transformer.init_model(jax.random.key(0), cfg)
+    rt = Runtime(mesh=None, training=False)
+    make_cache = lambda: transformer.init_cache(params, cfg, rt, 1, 8)
+    return StreamingServer(
+        params, steps.make_arena_top_step(cfg, rt, 1), make_cache,
+        max_batch=max_batch, capacity=capacity,
+        x_shape=(1, 1, cfg.d_model))
+
+
+def test_slot_reuse_after_close_resets_state():
+    """A closed session's slot is reclaimed for the next admission, and the
+    serve loop resets its cache row to the fresh template before reuse."""
+    server = _server(capacity=1)
+    s1 = server._session_for(11, endpoint=None)
+    assert s1.slot == 0
+    # simulate served progress in slot 0
+    server.arena.cache["pos"] = server.arena.cache["pos"].at[0].set(5)
+    s1.closed = True
+    s2 = server._session_for(22, endpoint=None)
+    assert s2.slot == 0 and s1.slot == -1       # reclaimed, not duplicated
+    assert server._pending_resets == [0]
+    server._process([])                          # serve loop applies resets
+    assert server._pending_resets == []
+    assert int(np.asarray(server.arena.cache["pos"])[0]) == 0
+
+
+def test_arena_full_raises_at_admission():
+    server = _server(capacity=2)
+    server._session_for(1, endpoint=None)
+    server._session_for(2, endpoint=None)
+    with pytest.raises(RuntimeError, match="arena full"):
+        server._session_for(3, endpoint=None)
+
+
+def test_inactive_slots_do_not_advance():
+    """The active-slot mask: inactive rows pass through the donated step
+    bit-identically — position and KV never move for a slot that received
+    no frame in a flush."""
+    cfg = _smoke_cfg(compressor="randtopk", k=8)
+    params = transformer.init_model(jax.random.key(0), cfg)
+    rt = Runtime(mesh=None, training=False)
+    step = jax.jit(steps.make_arena_top_step(cfg, rt, 1))
+    cache = jax.tree.map(
+        lambda a: jnp.stack([a] * 3),
+        transformer.init_cache(params, cfg, rt, 1, 8))
+    xbuf = jnp.asarray(np.random.RandomState(0).randn(
+        4, 1, 1, cfg.d_model).astype(np.float32))
+    active = jnp.asarray([True, False, True])
+    _, new = step(params, xbuf, cache, active)
+    assert np.asarray(new["pos"]).tolist() == [1, 0, 1]
+    old_kv = jax.tree.leaves(cache["kv"])
+    new_kv = jax.tree.leaves(new["kv"])
+    for o, n in zip(old_kv, new_kv):
+        np.testing.assert_array_equal(np.asarray(o[1]), np.asarray(n[1]))
+        assert not np.array_equal(np.asarray(o[0]), np.asarray(n[0]))
