@@ -10,35 +10,48 @@ trajectory point is written to the repo-root `BENCH_serve.json`
 (overwritten each run; history lives in version control).
 
 Timing hygiene: every jit in the hot loop (per-compressor bottom steps, the
-server's per-meta slot decodes, the donated arena step) is compiled AND
-executed once by the engine's warmup before its clock starts, so
-`tokens_per_s` never folds compile time into the first row of a sweep.
-Each row also carries the serve loop's per-stage wall split (payload/frame
-decode, device step, reply) and the clients' p50/p95 request->token
-latency.
+server's per-(meta, bucket) slot decodes, the fused decode+step, the donated
+arena step) is compiled AND executed once by the engine's warmup before its
+clock starts, so `tokens_per_s` never folds compile time into the first row
+of a sweep. Each row also carries the serve loop's per-TOKEN stage costs
+(host staging / fused-or-plain step / reply, normalized by the tokens the
+flushes served), the host staging-vs-wire byte ratio, and the clients'
+p50/p95 request->token latency.
+
+Roofline audit: every serving program (per-kind slot decode, per-kind fused
+decode+step) is lowered, compiled, and costed with `roofline.hlo
+.program_costs`, then compared against the analytic predictions in
+`roofline.analysis` (`serving_decode_costs` / `serving_step_costs`). The
+predicted-vs-measured flops/bytes rows land in BENCH_serve.json under
+`roofline`; tolerances are the calibrated bands documented there and in
+docs/performance.md.
 
 Perf gate (run by `scripts/ci.sh --smoke`): the randtopk/identity
 tokens-per-second ratio at the largest client count served by both pure
 mixes must stay above `RATIO_FLOOR` — the compressed path must remain the
-fast path; both the ratio and the floor are recorded in the JSON.
+fast path; the ratio, the floor, and each gate run's per-stage decode/step
+split are recorded in the JSON.
 
     PYTHONPATH=src python benchmarks/serve_throughput.py --smoke
 """
 from __future__ import annotations
 
 import argparse
+import gc
 import json
 import pathlib
 import sys
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as configs
-from repro.core import wire
+from repro.core import compressors, wire
 from repro.models import transformer
-from repro.models.config import SplitConfig
-from repro.runtime import engine
+from repro.models.config import Runtime, SplitConfig
+from repro.roofline import analysis, hlo as hlo_mod
+from repro.runtime import engine, steps
 from repro.split import protocol
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
@@ -48,13 +61,24 @@ TOL = 0.05  # measured-vs-analytic relative tolerance (acceptance bar)
 
 #: perf-smoke floor: randtopk must serve at least this fraction of
 #: identity's tokens/s in pure 8-client mixes. The pre-arena host-densify
-#: loop sat at ~0.54; arena serving measures 0.7-1.0 depending on thread
-#: scheduling (runs are sub-second, so the gate takes the median of
-#: GATE_REPS dedicated runs per mix). 0.6 cleanly separates the two
-#: regimes with slack for CI jitter.
-RATIO_FLOOR = 0.6
-GATE_REPS = 3
+#: loop sat at ~0.54; the fused decode+step serving path measures
+#: 0.85-1.05 (the two mixes pay near-identical client and server work, so
+#: only thread-scheduling noise separates them; runs are sub-second and
+#: the gate takes the median of GATE_REPS dedicated runs per mix). 0.8
+#: keeps the compressed path honest while absorbing CI jitter.
+RATIO_FLOOR = 0.8
+GATE_REPS = 5
 GATE_CLIENTS = 8
+#: tokens generated per session in each gate run. Long enough that the
+#: flush cadence locks into full 8-row batches for most of the run —
+#: short runs (gen<=32) spend a third of their wall in session ramp and
+#: under-report steady-state tokens/s by ~15% on a single-core box.
+GATE_GEN = 48
+
+#: the serving-kernel roofline audit covers one payload kind per wire
+#: format the compressors can emit
+AUDIT_SPECS = ("identity", "randtopk:k=16", "quant:bits=4",
+               "randtopk_quant:k=16,bits=8")
 
 
 def _codec_frame_payload_nbytes(cfg, comp) -> int:
@@ -126,6 +150,73 @@ def _mix_rows(cfg, res, emit) -> list:
     return rows
 
 
+def _roofline_rows(cfg, params, emit) -> list:
+    """Predicted-vs-measured (flops, bytes) audit of the serving programs.
+
+    Lowers + compiles the exact jitted pair the engine serves with (shared
+    via `engine._serving_steps`, so the audit also pre-populates the
+    serving jit cache), walks the optimized HLO with
+    `roofline.hlo.program_costs`, and checks each program against the
+    analytic predictions: decode flops must be exactly zero (no dots),
+    fused-step flops within `FUSED_FLOPS_RTOL`, and both byte counts
+    within their calibrated bands above the state-traffic floor.
+    """
+    rt = Runtime(mesh=None, training=False)
+    cut = cfg.split.cut_layer
+    cap, rows, max_len = GATE_CLIENTS, GATE_CLIENTS, 4 + 16
+    d = cfg.d_model
+    top_jit, fused_jit = engine._serving_steps(cfg, rt, cut, cfg.dtype, None)
+    xbuf = jnp.zeros((cap + 1, 1, 1, d), jnp.float32)
+    cache = jax.tree.map(
+        lambda a: jnp.stack([a] * cap),
+        transformer.init_cache(params, cfg, rt, 1, max_len))
+    state_nbytes = sum(l.nbytes for l in jax.tree.leaves(cache)) + xbuf.nbytes
+    active = jnp.zeros((cap,), bool)
+    slots = np.full(rows, cap, np.int64)
+    x = jax.random.normal(jax.random.key(1), (rows, 1, 1, d), jnp.float32)
+    decode_jit = jax.jit(
+        lambda xb, p, sl: protocol.decode_to_slots_in_jit(
+            xb, p, sl, dtype=cfg.dtype, backend=None))
+
+    out = []
+    for spec in AUDIT_SPECS:
+        comp = compressors.make_compressor(spec)
+        payload = comp.encode(x, training=False)
+        kind = payload.meta.kind
+        for program, (mf, mb) in (
+                ("decode", hlo_mod.program_costs(
+                    decode_jit.lower(xbuf, payload, slots)
+                    .compile().as_text())),
+                ("fused_step", hlo_mod.program_costs(
+                    fused_jit.lower(params, xbuf, payload, slots, cache,
+                                    active).compile().as_text()))):
+            if program == "decode":
+                pf, pb = analysis.serving_decode_costs(rows, d)
+                flops_ok = mf == pf        # no dots in a decode, ever
+                lo, hi = analysis.DECODE_BYTES_BAND
+            else:
+                pf, pb = analysis.serving_step_costs(cfg, cut, cap, max_len,
+                                                     state_nbytes)
+                flops_ok = abs(mf - pf) <= analysis.FUSED_FLOPS_RTOL * pf
+                lo, hi = analysis.FUSED_BYTES_BAND
+            ratio = mb / pb
+            bytes_ok = lo <= ratio <= hi
+            out.append(dict(
+                program=program, kind=kind, compressor=comp.name,
+                predicted_flops=pf, measured_flops=mf,
+                predicted_bytes_floor=pb, measured_bytes=mb,
+                bytes_ratio=round(ratio, 3),
+                bytes_band=[lo, hi],
+                ok=bool(flops_ok and bytes_ok)))
+            emit(f"roofline,{program},{kind},"
+                 f"flops_pred={pf:.4g},flops_meas={mf:.4g},"
+                 f"bytes_floor={pb:.4g},bytes_meas={mb:.4g},"
+                 f"bytes_ratio={ratio:.2f}")
+            emit(f"roofline_check,{program},{kind},"
+                 f"predicted_vs_measured,{bool(flops_ok and bytes_ok)}")
+    return out
+
+
 def main(emit=print, smoke: bool = False) -> bool:
     cfg = configs.get("qwen3-8b", smoke=True).with_(
         split=SplitConfig(cut_layer=1, compressor="randtopk", k=16))
@@ -142,6 +233,53 @@ def main(emit=print, smoke: bool = False) -> bool:
                     (8, mixed), (16, mixed),
                     (8, ["quant:bits=4"]), (8, ["randtopk_quant:k=16,bits=8"])])
 
+    # perf gate FIRST, in the cleanest process state: the roofline audit and
+    # the sweep below compile extra programs and churn the allocator, which
+    # costs the gate runs ~8% tok/s when they go last on a single-core box.
+    # The compressed path must stay the fast path; individual sub-second
+    # runs are scheduler-noisy, so the gate takes the median of GATE_REPS
+    # dedicated longer runs per pure mix.
+    # reps are interleaved across the two mixes with a gc.collect() before
+    # each run: back-to-back reps of one mix see drifting process state
+    # (allocator churn from the previous runs' arenas and sessions), which
+    # skewed whichever mix ran second by ~10%
+    gate_mixes = (("identity", ["identity"]), ("randtopk", ["randtopk:k=16"]))
+    gate_samples = {name: [] for name, _ in gate_mixes}
+    gate_stage = {}
+    for name, mix in gate_mixes:
+        # untimed warmup: pays the jit compiles the sweep used to provide
+        engine.run_streaming(cfg, n_clients=GATE_CLIENTS, prompt_len=4,
+                             gen=4, max_batch=8, max_wait=0.02,
+                             compressor_mix=mix, params=params)
+    for _ in range(GATE_REPS):
+        for name, mix in gate_mixes:
+            gc.collect()
+            res = engine.run_streaming(
+                cfg, n_clients=GATE_CLIENTS, prompt_len=4, gen=GATE_GEN,
+                max_batch=8, max_wait=0.02, compressor_mix=mix,
+                params=params)
+            gate_samples[name].append(res["tokens_per_s"])
+            # per-stage decode/step split of the last gate run, per token
+            stok = max(res["stage_tokens"], 1)
+            gate_stage[name] = {k: round(v / stok * 1e6, 2)
+                                for k, v in res["stage_s"].items()}
+    gate_tps = {name: float(np.median(s)) for name, s in gate_samples.items()}
+    ratio = gate_tps["randtopk"] / gate_tps["identity"]
+    ratio_ok = ratio >= RATIO_FLOOR
+    emit(f"serve,perf_gate,n_clients={GATE_CLIENTS},"
+         f"identity_tok_per_s={gate_tps['identity']:.1f},"
+         f"randtopk_tok_per_s={gate_tps['randtopk']:.1f},"
+         f"randtopk_identity_ratio={ratio:.3f},floor={RATIO_FLOOR}")
+    for name, st in gate_stage.items():
+        emit(f"serve,perf_gate_stage,{name},"
+             f"decode_us_tok={st['decode']},step_us_tok={st['step']},"
+             f"reply_us_tok={st['reply']}")
+    emit(f"serve_check,perf_gate,randtopk_vs_identity_ratio,{ratio_ok}")
+
+    roofline_rows = _roofline_rows(cfg, params, emit)
+    roofline_ok = all(r["ok"] for r in roofline_rows)
+    emit(f"roofline_check,all_programs,predicted_vs_measured,{roofline_ok}")
+
     all_rows, ok_all = [], True
     for n_clients, mix in points:
         res = engine.run_streaming(
@@ -149,41 +287,32 @@ def main(emit=print, smoke: bool = False) -> bool:
             max_batch=min(8, n_clients), max_wait=0.02,
             compressor_mix=mix, params=params)
         stage = res["stage_s"]
+        stok = max(res["stage_tokens"], 1)
+        stage_us_tok = {k: v / stok * 1e6 for k, v in stage.items()}
+        hb = res["host_bytes"]
+        staged_ratio = hb["staged"] / max(hb["wire"], 1)
         emit(f"serve,run,clients={n_clients},mix={'+'.join(mix)},"
              f"tok_per_s={res['tokens_per_s']:.1f},"
              f"mean_batch_fill={np.mean(res['batch_sizes']):.2f},"
              f"wall_s={res['wall_s']:.2f},"
-             f"decode_s={stage['decode']:.3f},step_s={stage['step']:.3f},"
-             f"reply_s={stage['reply']:.3f}")
+             f"decode_us_tok={stage_us_tok['decode']:.1f},"
+             f"step_us_tok={stage_us_tok['step']:.1f},"
+             f"reply_us_tok={stage_us_tok['reply']:.1f},"
+             f"staged_over_wire={staged_ratio:.2f}")
         rows = _mix_rows(cfg, res, emit)
         for r in rows:
             r.update(n_clients=n_clients,
                      tokens_per_s=res["tokens_per_s"],
                      mean_batch_fill=float(np.mean(res["batch_sizes"])),
-                     stage_s={k: round(v, 4) for k, v in stage.items()})
+                     stage_us_per_token={k: round(v, 2)
+                                         for k, v in stage_us_tok.items()},
+                     host_staged_over_wire=round(staged_ratio, 3))
             ok_all &= r["ok"]
         all_rows.extend(rows)
 
     dense_B = d * 4
     emit(f"serve_check,all_compressors,measured_within_5pct,{ok_all}")
-    # perf gate: the compressed path must stay the fast path. Individual
-    # sub-second runs are scheduler-noisy, so the gate takes the median of
-    # GATE_REPS dedicated longer runs per pure mix.
-    gate_tps = {}
-    for name, mix in (("identity", ["identity"]),
-                      ("randtopk", ["randtopk:k=16"])):
-        samples = [engine.run_streaming(
-            cfg, n_clients=GATE_CLIENTS, prompt_len=4, gen=16,
-            max_batch=8, max_wait=0.02, compressor_mix=mix,
-            params=params)["tokens_per_s"] for _ in range(GATE_REPS)]
-        gate_tps[name] = float(np.median(samples))
-    ratio = gate_tps["randtopk"] / gate_tps["identity"]
-    ratio_ok = ratio >= RATIO_FLOOR
-    emit(f"serve,perf_gate,n_clients={GATE_CLIENTS},"
-         f"identity_tok_per_s={gate_tps['identity']:.1f},"
-         f"randtopk_tok_per_s={gate_tps['randtopk']:.1f},"
-         f"randtopk_identity_ratio={ratio:.3f},floor={RATIO_FLOOR}")
-    emit(f"serve_check,perf_gate,randtopk_vs_identity_ratio,{ratio_ok}")
+    ok_all &= roofline_ok
     ok_all &= ratio_ok
     point = {"bench": "serve_throughput", "smoke": bool(smoke),
              "arch": cfg.name, "d_model": d,
@@ -193,6 +322,8 @@ def main(emit=print, smoke: bool = False) -> bool:
              "randtopk_identity_ratio": round(float(ratio), 4),
              "ratio_n_clients": GATE_CLIENTS, "ratio_floor": RATIO_FLOOR,
              "gate_reps": GATE_REPS,
+             "gate_stage_us_per_token": gate_stage,
+             "roofline": roofline_rows,
              "rows": all_rows, "ok": bool(ok_all)}
     BENCH_PATH.write_text(json.dumps(point, indent=2) + "\n")
     emit(f"serve,wrote,{BENCH_PATH.name}")

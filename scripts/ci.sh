@@ -9,6 +9,13 @@ cd "$(dirname "$0")/.."
 # README/docs links must point at files that exist
 python scripts/check_docs.py
 
+# fused decode kernel parity: the Pallas (interpret-mode on CPU) decode
+# family must match the two-pass XLA decode bit-for-bit (<= 1 ulp for
+# quant kinds) for every payload kind before anything downstream runs on
+# top of it — a codegen regression here silently corrupts every served
+# activation
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q tests/test_decode_kernels.py
+
 # seeded chaos smoke: streaming + fedtrain under an injected FaultPlan
 # (corrupt/truncate/drop/duplicate/reorder) must complete with tokens and
 # losses identical to the clean run — CRC catches every corruption, sessions
@@ -20,8 +27,11 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/chaos_smoke.py
 # size, and the randtopk/identity tokens-per-second ratio (median of
 # GATE_REPS pure 8-client runs each) must stay above the RATIO_FLOOR
 # pinned in the bench — the compressed path must remain the fast path; a
-# regression to host-side densification fails here. Writes
-# BENCH_serve.json with the ratio, floor, and per-stage timings.
+# regression to host-side densification fails here. Also audits the
+# compiled decode + fused-step programs against the closed-form roofline
+# predictions (exact flops, calibrated byte bands). Writes
+# BENCH_serve.json with the ratio, floor, per-stage timings, and
+# roofline rows.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/serve_throughput.py --smoke
 
 # fedtrain smoke: over-the-wire split training; randtopk bytes must match

@@ -88,30 +88,48 @@ def _scatter_rows(vals, idx, d: int, backend):
                               axis=-1, inplace=False)
 
 
-def payload_to_dense(p: Payload, shape=None, dtype=None, *, backend=None):
+def payload_to_dense(p: Payload, shape=None, dtype=None, *, backend=None,
+                     project=None):
     """Dense view (..., d) of any payload — the label-owner-side Decode.
 
     Compressor-independent: dispatches on `p.meta.kind` only, so the far
     side of the wire never needs the compressor object itself. `backend`
-    picks the sparse-scatter implementation (None/"auto" -> Pallas on TPU,
-    XLA elsewhere — the `selection` dispatch contract); results are
-    identical either way for the unique-index supports compressors emit.
+    follows the `selection` dispatch contract (None/"auto" -> Pallas on
+    TPU, XLA elsewhere): ``"pallas"`` runs the fused one-pass
+    `kernels.decode` kernel for EVERY kind (dequant + scatter in one VMEM
+    pass), ``"xla"`` the two-pass dequant->scatter below. Dense/slice/
+    sparse results are bit-identical either way (wire floats verbatim);
+    quant kinds may differ by 1 ulp of the dequant product (FMA
+    contraction — see `_dequant`).
+
+    `project` is an optional (d, p) cut-projection matrix: the Pallas path
+    fuses `rows @ project` as a kernel epilogue (the decoded rows never
+    materialize); the XLA path applies the same matmul after decoding.
     """
     dtype = dtype or jnp.float32
     m = p.meta
+    if selection._resolve_backend(backend) == "pallas":
+        from repro.kernels.decode import ops as dec_ops
+
+        return dec_ops.decode_rows(p, dtype=dtype, project=project,
+                                   interpret=selection._pallas_interpret())
     if m.kind == "dense":
-        return p.values.astype(dtype)
-    if m.kind == "slice":
+        out = p.values.astype(dtype)
+    elif m.kind == "slice":
         pad = [(0, 0)] * (p.values.ndim - 1) + [(0, m.d - m.k)]
-        return jnp.pad(p.values.astype(dtype), pad)
-    if m.kind == "sparse":
-        return _scatter_rows(p.values.astype(dtype), p.indices, m.d, backend)
-    if m.kind == "quant":
-        return _dequant(p).astype(dtype)
-    if m.kind == "sparse_quant":
-        return _scatter_rows(_dequant(p).astype(dtype), p.indices, m.d,
-                             backend)
-    raise ValueError(m.kind)
+        out = jnp.pad(p.values.astype(dtype), pad)
+    elif m.kind == "sparse":
+        out = _scatter_rows(p.values.astype(dtype), p.indices, m.d, backend)
+    elif m.kind == "quant":
+        out = _dequant(p).astype(dtype)
+    elif m.kind == "sparse_quant":
+        out = _scatter_rows(_dequant(p).astype(dtype), p.indices, m.d,
+                            backend)
+    else:
+        raise ValueError(m.kind)
+    if project is not None:
+        out = (out @ project.astype(jnp.float32)).astype(dtype)
+    return out
 
 
 def _dequant(p: Payload):

@@ -1,0 +1,2 @@
+"""Fused payload-decode kernels (dequant + scatter + cut-projection)."""
+from repro.kernels.decode import kernel, ops  # noqa: F401

@@ -1,0 +1,209 @@
+"""Fused payload-decode Pallas kernels: dequant + scatter + projection.
+
+One kernel family replaces the decode-side seam that used to be two XLA
+passes (dequantize the u8 codes, then scatter/pad into dense rows): for
+every payload kind the wire leaves become dense f32 rows in a single
+lane-parallel pass over a VMEM-resident row tile, with an optional
+cut-projection epilogue (`rows @ w`) fused behind the scatter so the
+decoded activation can leave the kernel already projected.
+
+Two entry points:
+
+  * `decode_rows_kernel` — flat (rows, d) decode, gridded over row blocks;
+    the `backend="pallas"` implementation behind every kind of
+    `core.compressors.payload_to_dense` (the scatter-only kernel in
+    `kernels.randtopk` covered just the sparse kinds).
+  * `decode_to_slots_kernel` — the serving-arena variant: one grid step per
+    flush row, the slot ids streamed in via scalar prefetch
+    (`pltpu.PrefetchScalarGridSpec`) drive the OUTPUT block index map, and
+    the arena's cut-activation buffer is passed through
+    `input_output_aliases` so untouched slot rows keep their contents and
+    the decoded rows land in `xbuf[slots]` without a separate scatter pass
+    (on TPU the buffer is updated in place; interpret mode copies).
+
+Numerics match the two-pass XLA decode bit-for-bit for dense/slice/sparse
+kinds (values cross the kernel verbatim; the compare-and-select scatter
+adds exact zeros elsewhere). Quant kinds run the same `lo + (code + 0.5) *
+step` multiply-add, which either compiler may contract into an FMA — the
+1-ulp convention pinned by tests/test_arena.py and docs/performance.md.
+
+Layout notes: the feature axis lives whole in VMEM (d <= 16k f32), rows
+tile over the grid; the k-wide support loop is the branch-free
+compare-and-select accumulate of `kernels.randtopk._scatter_rows_kernel`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+#: wire leaves each payload kind carries, in `payload.WIRE_FIELDS` order
+KIND_LEAVES = {
+    "dense": ("values",),
+    "slice": ("values",),
+    "sparse": ("values", "indices"),
+    "quant": ("values", "header"),
+    "sparse_quant": ("values", "indices", "header"),
+}
+
+
+def _dequant_block(codes, hdr):
+    """`lo + (code + 0.5) * step` on a (br, k) tile — identical arithmetic
+    to `core.compressors._dequant` (see the 1-ulp FMA note there)."""
+    lo, step = hdr[..., 0:1], hdr[..., 1:2]
+    return lo + (codes.astype(jnp.float32) + 0.5) * step
+
+
+def _scatter_block(vals, idx, d: int):
+    """Branch-free compare-and-select scatter of a (br, k) support onto
+    (br, d) lanes; exact for unique per-row indices (duplicates sum)."""
+    lanes = jax.lax.broadcasted_iota(jnp.int32, vals.shape[:-1] + (d,),
+                                     vals.ndim - 1)
+
+    def body(j, acc):
+        ij = jax.lax.dynamic_slice_in_dim(idx, j, 1, axis=-1)
+        vj = jax.lax.dynamic_slice_in_dim(vals, j, 1, axis=-1)
+        return acc + jnp.where(lanes == ij, vj, 0.0)
+
+    return jax.lax.fori_loop(0, vals.shape[-1], body,
+                             jnp.zeros(vals.shape[:-1] + (d,), jnp.float32))
+
+
+def _decode_block(kind: str, leaf_refs, d: int):
+    """Wire-leaf tile(s) -> dense f32 (br, d) tile, dispatched on kind."""
+    if kind == "dense":
+        (v_ref,) = leaf_refs
+        return v_ref[...].astype(jnp.float32)
+    if kind == "slice":
+        (v_ref,) = leaf_refs
+        v = v_ref[...].astype(jnp.float32)
+        k = v.shape[-1]
+        if k == d:
+            return v
+        return jnp.concatenate(
+            [v, jnp.zeros(v.shape[:-1] + (d - k,), jnp.float32)], axis=-1)
+    if kind == "sparse":
+        v_ref, i_ref = leaf_refs
+        return _scatter_block(v_ref[...].astype(jnp.float32),
+                              i_ref[...].astype(jnp.int32), d)
+    if kind == "quant":
+        c_ref, h_ref = leaf_refs
+        return _dequant_block(c_ref[...], h_ref[...])
+    if kind == "sparse_quant":
+        c_ref, i_ref, h_ref = leaf_refs
+        return _scatter_block(_dequant_block(c_ref[...], h_ref[...]),
+                              i_ref[...].astype(jnp.int32), d)
+    raise ValueError(kind)
+
+
+def _make_rows_kernel(kind: str, d: int, project: bool, out_dtype):
+    def kernel(*refs):
+        if project:
+            *leaf_refs, w_ref, o_ref = refs
+            rows = _decode_block(kind, leaf_refs, d)
+            rows = jnp.dot(rows, w_ref[...].astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+        else:
+            *leaf_refs, o_ref = refs
+            rows = _decode_block(kind, leaf_refs, d)
+        o_ref[...] = rows.astype(out_dtype)
+
+    return kernel
+
+
+def _rows_blocks(leading_shape, block_rows: int):
+    rows = 1
+    for s in leading_shape:
+        rows *= s
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    return rows, br, pad
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "d", "dtype",
+                                             "block_rows", "interpret"))
+def decode_rows_kernel(leaves, kind: str, d: int, w=None, *,
+                       dtype=jnp.float32, block_rows: int = 128,
+                       interpret: bool = True):
+    """Fused one-pass decode: wire leaves -> dense (or projected) rows.
+
+    leaves : tuple of wire arrays in `KIND_LEAVES[kind]` order, common
+             leading shape (...,) + trailing (k|d|2)
+    w      : optional (d, p) cut-projection matrix — fused epilogue, the
+             decoded rows never materialize when it is given
+    Returns (..., d) [or (..., p)] in `dtype`.
+    """
+    assert d <= 16384, "dense row must fit a VMEM row tile"
+    lead = leaves[0].shape[:-1]
+    rows, br, pad = _rows_blocks(lead, block_rows)
+    flat = [a.reshape((rows, a.shape[-1])) for a in leaves]
+    if pad:
+        flat = [jnp.pad(a, ((0, pad), (0, 0))) for a in flat]
+    grid = (flat[0].shape[0] // br,)
+    in_specs = [pl.BlockSpec((br, a.shape[-1]), lambda i: (i, 0))
+                for a in flat]
+    operands = list(flat)
+    project = w is not None
+    p_out = d
+    if project:
+        p_out = w.shape[-1]
+        in_specs.append(pl.BlockSpec(w.shape, lambda i: (0, 0)))
+        operands.append(w)
+
+    out = pl.pallas_call(
+        _make_rows_kernel(kind, d, project, jnp.dtype(dtype)),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((br, p_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((flat[0].shape[0], p_out),
+                                       jnp.dtype(dtype)),
+        interpret=interpret,
+    )(*operands)
+    if pad:
+        out = out[:rows]
+    return out.reshape(lead + (p_out,))
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "interpret"))
+def decode_to_slots_kernel(xbuf, leaves, slots, kind: str, *,
+                           interpret: bool = True):
+    """Decode flush rows straight into `xbuf[slots]`, one fused pass.
+
+    xbuf   : (C + 1, d) arena cut-activation buffer (last row = scratch);
+             ALIASED into the output — untouched rows keep their contents,
+             and on TPU the update is in place (pair with a donated jit).
+    leaves : tuple of stacked wire arrays, leading dim = flush rows n
+    slots  : (n,) int32 arena slot per flush row (scalar-prefetched: the
+             slot ids drive the output block index map, so row i's decoded
+             tile is written directly to block `slots[i]` — no host-side
+             dense staging and no separate scatter pass)
+
+    Rows aimed at the same slot (the scratch-row padding convention) write
+    identical zero rows, so duplicate targets are benign.
+    """
+    cap1, d = xbuf.shape
+    assert d <= 16384, "dense row must fit a VMEM row tile"
+    n = leaves[0].shape[0]
+    flat = [a.reshape((n, a.shape[-1])) for a in leaves]
+
+    def kernel(s_ref, x_ref, *rest):
+        *leaf_refs, o_ref = rest
+        o_ref[...] = _decode_block(kind, leaf_refs, d).astype(xbuf.dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, d), lambda i, s: (s[i], 0))]
+                 + [pl.BlockSpec((1, a.shape[-1]), lambda i, s: (i, 0))
+                    for a in flat],
+        out_specs=pl.BlockSpec((1, d), lambda i, s: (s[i], 0)))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((cap1, d), xbuf.dtype),
+        input_output_aliases={1: 0},    # xbuf (operand 1, after slots) -> out
+        interpret=interpret,
+    )(jnp.asarray(slots, jnp.int32), xbuf, *flat)

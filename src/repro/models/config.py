@@ -62,6 +62,10 @@ class ArchConfig:
     # --- numerics ---
     param_dtype: str = "float32"
     dtype: str = "float32"
+    kv_cache_bits: int = 0          # serving-arena KV cache width: 8 ->
+    #   int8 codes + f32 per-(token, head) scale rows in the arena
+    #   (attention.init_kv_cache); 0 -> the Runtime default (f32). Applies
+    #   to the label owner's top-model cache only — clients keep f32.
     # --- split learning ---
     split: Optional[SplitConfig] = None
 

@@ -137,3 +137,63 @@ def active_param_count(cfg) -> int:
 def model_flops(cfg, *, tokens: int, training: bool) -> float:
     mult = 6.0 if training else 2.0
     return mult * active_param_count(cfg) * tokens
+
+
+# --------------------------------------------------------------------------
+# Serving-kernel audit: predicted (flops, bytes) for the streaming server's
+# compiled programs, under the SAME conventions as `hlo.program_costs`
+# (flops = dots only, loop-amplified; bytes = 2x every materialized
+# instruction output, fusion internals excluded). Tolerances are calibrated
+# against the XLA:CPU smoke programs and documented in docs/performance.md.
+# --------------------------------------------------------------------------
+
+#: measured decode bytes / predicted floor — XLA materializes scatter
+#: staging (zeros + one-hot accumulate) on top of the decoded update slice;
+#: dense decode sits at ~1.0x, sparse kinds at ~2.7x.
+DECODE_BYTES_BAND = (1.0, 4.0)
+#: measured fused-step bytes / predicted floor — per-layer activation
+#: intermediates (attention scores, FFN hidden states, residual copies,
+#: all materialized per arena row) land on top of the state-update floor
+#: (cache + xbuf); the XLA:CPU smoke programs calibrate at ~10x.
+FUSED_BYTES_BAND = (1.0, 16.0)
+#: fused-step dot flops are fully predictable: matmul params + attention
+#: score/mix dots; everything else in the program is elementwise.
+FUSED_FLOPS_RTOL = 0.05
+
+
+def top_matmul_params(cfg, cut: int) -> int:
+    """Matmul (dot-contributing) params of the label owner's top model:
+    attention + FFN projections of layers [cut, n_layers) plus the unembed
+    over the padded vocab. Embedding gathers and norms contribute no dots,
+    so this matches `hlo.program_costs` flops, not the byte-count param
+    total. Dense-family only (the serving bench's arch)."""
+    d, ff = cfg.d_model, cfg.d_ff
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    attn = d * hq * hd + 2 * d * hkv * hd + hq * hd * d
+    return (cfg.n_layers - cut) * (attn + 3 * d * ff) + d * cfg.padded_vocab
+
+
+def serving_decode_costs(rows: int, d: int, *, dtype_bytes: int = 4):
+    """Predicted (flops, bytes floor) of the slot-decode program.
+
+    No dots -> 0 flops exactly. The byte floor is the decoded update slice
+    written + read (2 * rows * d); measured lands within
+    `DECODE_BYTES_BAND` of it depending on how much scatter staging the
+    payload kind makes XLA materialize."""
+    return 0.0, 2.0 * rows * d * dtype_bytes
+
+
+def serving_step_costs(cfg, cut: int, capacity: int, max_len: int,
+                       state_nbytes: int):
+    """Predicted (flops, bytes floor) of the fused decode+step program.
+
+    flops: every arena row computes (inactive rows are masked afterwards),
+    each paying the top matmul params plus the two decode-attention dots
+    against a `max_len` KV cache — exact to `FUSED_FLOPS_RTOL`.
+    bytes floor: the arena state written + read (`state_nbytes` = cache
+    leaves + xbuf, measured off the live arrays so an int8 KV arena
+    predicts its smaller traffic automatically); measured lands within
+    `FUSED_BYTES_BAND` of it."""
+    score_dots = 2 * cfg.n_heads * cfg.hd * max_len
+    flops = 2.0 * capacity * (top_matmul_params(cfg, cut) + score_dots)
+    return flops, 2.0 * state_nbytes

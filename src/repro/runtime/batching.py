@@ -45,7 +45,15 @@ class BatchingQueue:
             if self._closed:
                 raise RuntimeError("put() on closed BatchingQueue")
             self._items.append((time.monotonic(), item))
-            self._cv.notify_all()
+            # wake the consumer only when its behavior can change: the
+            # first pending item (starts the max_wait deadline) and the
+            # fill-completing item (flush now). Intermediate puts would
+            # each bounce the single consumer awake just to recompute an
+            # unchanged deadline — measurable thrash when producers and
+            # the serve loop time-slice one core.
+            n = len(self._items)
+            if n == 1 or n >= self.max_batch:
+                self._cv.notify_all()
 
     def close(self) -> None:
         with self._cv:

@@ -9,11 +9,13 @@ against the Table-2 analytics.
 """
 from __future__ import annotations
 
+import functools
 import threading
 import time
 from typing import List, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compressors
@@ -21,9 +23,26 @@ from repro.models import transformer
 from repro.models.config import ArchConfig, Runtime
 from repro.runtime import steps
 from repro.runtime.client import StreamingClient
-from repro.runtime.server import StreamingServer
+from repro.runtime.server import StreamingServer, jit_serving_steps
 from repro.runtime.transport import channel_pair
 from repro.split import protocol
+
+
+@functools.lru_cache(maxsize=32)
+def _serving_steps(cfg: ArchConfig, rt: Runtime, cut: int, dtype_name: str,
+                   backend: Optional[str]):
+    """Cross-run cache of the server's jitted step pair.
+
+    jit compile caches live on the wrapped callable, so handing every
+    `run_streaming` call the same pair (keyed by the hashable frozen
+    configs) means a benchmark sweep compiles each (meta, bucket) program
+    once per process instead of once per run — the repeated-run gate used
+    to re-pay the whole warm loop every repetition. Arena shapes (capacity)
+    may differ between runs; the jit object retraces per shape and keeps
+    both programs."""
+    top = steps.make_arena_top_step(cfg, rt, cut)
+    return jit_serving_steps(top, dtype=jnp.dtype(dtype_name),
+                             backend=backend)
 
 
 def _client_compressors(cfg: ArchConfig, n_clients: int,
@@ -59,6 +78,11 @@ def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
     drop faults); None keeps the clean-wire single-wait behavior.
     """
     rt = Runtime(mesh=None, training=False)
+    # the label owner may serve from a quantized KV arena (int8 codes +
+    # f32 scale rows, `ArchConfig.kv_cache_bits`); feature owners always
+    # keep their bottom-model caches at the Runtime default (f32)
+    rt_top = Runtime(mesh=None, training=False,
+                     kv_cache_bits=cfg.kv_cache_bits or rt.kv_cache_bits)
     cut = (cfg.split.cut_layer if cfg.split and cfg.split.cut_layer > 0
            else max(1, cfg.n_layers // 2))
     assert 0 < cut < cfg.n_layers
@@ -72,13 +96,18 @@ def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
     bottom_steps = {c: jax.jit(steps.make_bottom_step(cfg, rt, cut, c))
                     for c in dict.fromkeys(comps)}
     make_cache = lambda: transformer.init_cache(params, cfg, rt, 1, max_len)
+    make_top_cache = lambda: transformer.init_cache(params, cfg, rt_top, 1,
+                                                    max_len)
     # every session owns a device-resident arena slot for its whole life,
-    # so capacity = the expected concurrent session count
-    server = StreamingServer(params, steps.make_arena_top_step(cfg, rt, cut),
-                             make_cache, max_batch=max_batch,
+    # so capacity = the expected concurrent session count; the jitted step
+    # pair is shared across runs (see _serving_steps)
+    server = StreamingServer(params, None, make_top_cache,
+                             max_batch=max_batch,
                              max_wait=max_wait, dtype=cfg.adtype(),
                              capacity=n_clients,
-                             x_shape=(1, 1, cfg.d_model))
+                             x_shape=(1, 1, cfg.d_model),
+                             jit_steps=_serving_steps(
+                                 cfg, rt_top, cut, cfg.dtype, None))
     server.expected_sessions = n_clients
 
     prompts = np.asarray(jax.random.randint(
@@ -140,10 +169,15 @@ def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
         "compressor_objs": comps,
         "batch_sizes": server.batch_sizes,
         "fault_counters": fault_summary(server, clients),
-        # serve-loop wall seconds by stage (payload-group prep + device
-        # decode dispatch / donated arena step incl. token readback / reply
-        # framing+send) and per-client request->token round-trip latencies
+        # serve-loop wall seconds by stage (host staging [+ mixed-meta
+        # decode dispatch] / fused-or-plain step incl. token readback /
+        # reply framing+send), the token count those flushes served (for
+        # per-token stage costs), host staging-vs-wire byte totals, and
+        # per-client request->token round-trip latencies
         "stage_s": dict(server.stage_s),
+        "stage_tokens": server.stage_tokens,
+        "host_bytes": dict(server.host_bytes),
+        "flushes": len(server.batch_sizes),
         "client_latencies": [list(c.latencies) for c in clients],
         "wall_s": wall,
         "tokens_per_s": tokens.size / max(wall, 1e-9),

@@ -9,14 +9,18 @@ session-slot arena (`runtime.arena.SlotArena`):
     and position are rows of pre-allocated batched device arrays for the
     session's whole life (reconnects keep the slot; a closed session's slot
     is reset and reused);
-  * each flush, payloads are grouped by meta and scatter-decoded ON DEVICE
-    straight into the arena's cut-activation buffer rows
-    (`protocol.server_decode_to_slots`, padded to `max_batch` onto a cached
-    zero scratch row so each meta compiles once) — the host touches only
+  * each flush, payloads are staged into cached per-(meta, bucket) host
+    buffers — padded to the nearest power-of-two flush bucket, NOT to
+    `max_batch`, so a ragged flush stages < 2x its wire bytes instead of
+    the old `max_batch/fill` amplification — and the host touches only
     the compressed wire leaves, never a dense activation;
-  * one donated jitted top step runs over the WHOLE arena with an
-    active-slot mask — zero per-flush cache stack/unstack, inactive slots
-    pass through unchanged — and only the token rows come back to host.
+  * a single-meta flush (every pure-compressor population) runs ONE fused
+    decode+step dispatch (`steps.make_fused_decode_step`): the payload
+    scatter-decodes into `xbuf[slots]` and the donated whole-arena top
+    step runs in the same jit program, with only the token rows coming
+    back to host. Mixed-meta flushes fall back to per-meta device decodes
+    (`protocol.server_decode_to_slots`) followed by the donated arena
+    step — two dispatches, same numerics.
 
 Token replies stream back as frames; per-session byte accounting is taken
 from the real frame sizes at receipt. The hot-path design and its
@@ -42,10 +46,25 @@ import numpy as np
 
 from repro.core import wire
 from repro.core.payload import Payload
+from repro.runtime import steps
 from repro.runtime.arena import SlotArena
 from repro.runtime.batching import BatchingQueue
 from repro.runtime.session import Session
 from repro.split import protocol
+
+
+def jit_serving_steps(top_step: Callable, *, dtype,
+                      backend: Optional[str] = None):
+    """The server's jitted step pair: (donated plain arena step, donated
+    fused decode+step). Split out so `runtime.engine` can cache the pair
+    across `run_streaming` calls — jit compile caches live on the wrapped
+    callable, and rebuilding the pair per run re-pays every per-(meta,
+    bucket) compile the warm loop just amortized."""
+    top = jax.jit(top_step, donate_argnums=(2,))
+    fused = jax.jit(
+        steps.make_fused_decode_step(top_step, dtype=dtype, backend=backend),
+        donate_argnums=(1, 4))
+    return top, fused
 
 
 class FrameServerBase:
@@ -182,16 +201,26 @@ class StreamingServer(FrameServerBase):
     engine sets it to the expected client count.
     """
 
-    def __init__(self, params, top_step: Callable, make_cache: Callable,
+    def __init__(self, params, top_step: Optional[Callable],
+                 make_cache: Callable,
                  *, max_batch: int = 8, max_wait: float = 0.01,
                  dtype=jnp.float32, capacity: Optional[int] = None,
-                 x_shape=None, backend: Optional[str] = None):
+                 x_shape=None, backend: Optional[str] = None,
+                 jit_steps=None):
         self.params = params
-        self.top_step = jax.jit(top_step, donate_argnums=(2,))
+        # `jit_steps` (a `jit_serving_steps` pair) lets the engine share
+        # compiled programs across runs; direct construction from a bare
+        # arena step keeps working and jits here.
+        if jit_steps is None:
+            jit_steps = jit_serving_steps(top_step, dtype=dtype,
+                                          backend=backend)
+        self.top_step, self._fused_step = jit_steps
         self.dtype = dtype
         self.backend = backend              # sparse-decode backend dispatch
         self.batch_sizes: List[int] = []    # flush fill history
         self.stage_s = {"decode": 0.0, "step": 0.0, "reply": 0.0}
+        self.stage_tokens = 0               # tokens served by those flushes
+        #   (normalizes stage_s to per-token stage costs in the bench)
         self._init_connections(BatchingQueue(max_batch, max_wait))
         self.arena: Optional[SlotArena] = None
         self._make_cache = make_cache
@@ -201,7 +230,14 @@ class StreamingServer(FrameServerBase):
                                    dtype)    # first payload's meta.d
         self._free_slots: List[int] = list(range(self._capacity))
         self._pending_resets: List[int] = []    # applied by the serve loop
-        self._pad_rows: Dict = {}           # cached zero pad rows, per shape
+        # flush-size buckets: powers of two up to max_batch (plus max_batch
+        # itself when it is not one) — each (meta, bucket) decode/fused
+        # program compiles once, and ragged fills pad < 2x
+        self._buckets = sorted(
+            {1 << i for i in range(max_batch.bit_length())
+             if (1 << i) <= max_batch} | {max_batch})
+        self._staging: Dict = {}            # (meta, bucket, leaf) -> np buf
+        self.host_bytes = {"staged": 0, "wire": 0}
 
     def _ensure_arena(self, d: int) -> None:
         if self.arena is None:
@@ -243,20 +279,33 @@ class StreamingServer(FrameServerBase):
         """Compile every hot-loop jit before the serving clock starts.
 
         For each example payload (one per distinct client compressor,
-        encoded from a probe activation) runs the padded group decode
-        aimed entirely at the scratch row, then one all-inactive arena
-        step — shapes match the serve path exactly, no session state is
-        perturbed, and the first real flush pays zero compile time.
+        encoded from a probe activation) and each flush-size bucket, runs
+        the bucketed group decode aimed entirely at the scratch row AND
+        the fused decode+step (all-inactive, so no session state is
+        perturbed), then one plain arena step for the mixed-meta path —
+        shapes match both serve paths exactly, and the first real flush of
+        any fill pays zero compile time.
         """
         for p in example_payloads:
             self._ensure_arena(p.meta.d)
-            group = [p] * self.queue.max_batch
-            slots = np.full(len(group), self.arena.capacity, np.int64)
-            self._decode_group(p.meta, group, slots)
-        active = jnp.zeros((self.arena.capacity,), bool)
+            inactive = jnp.zeros((self.arena.capacity,), bool)
+            for size in self._buckets:
+                slots = np.full(size, self.arena.capacity, np.int64)
+                stacked, slots = self._stack_group(p.meta, [p] * size,
+                                                   slots, size)
+                self.arena.xbuf = protocol.server_decode_to_slots(
+                    self.arena.xbuf, stacked, slots, dtype=self.dtype,
+                    backend=self.backend)
+                _, self.arena.xbuf, self.arena.cache = self._fused_step(
+                    self.params, self.arena.xbuf, stacked, slots,
+                    self.arena.cache, inactive)
+        if self.arena is None:
+            return
         tokens, self.arena.cache = self.top_step(
-            self.params, self.arena.xbuf, self.arena.cache, active)
+            self.params, self.arena.xbuf, self.arena.cache,
+            jnp.zeros((self.arena.capacity,), bool))
         jax.block_until_ready(tokens)
+        self.host_bytes = {"staged": 0, "wire": 0}   # warm traffic is free
 
     def _dedup(self, items) -> List:
         """Stop-and-wait ARQ filter: the client never has two frames in
@@ -277,35 +326,53 @@ class StreamingServer(FrameServerBase):
                 sess.stats.count_down(len(sess.last_reply))
         return fresh
 
-    def _pad_row(self, like: np.ndarray) -> np.ndarray:
-        """Cached zero pad row for ragged decode groups. Pad rows scatter
-        into the arena's scratch slot and are NEVER an alias of a live
+    def _bucket(self, n: int) -> int:
+        """Smallest flush-size bucket holding `n` rows."""
+        return next(b for b in self._buckets if b >= n)
+
+    def _stack_group(self, meta, group, slots: np.ndarray, size: int):
+        """Stack one meta-group's wire leaves into the cached
+        (meta, bucket) staging buffers, zero-padding to `size` rows aimed
+        at the arena's scratch slot. Returns (stacked Payload, (size,)
+        slot vector). Pad rows are zeros, never an alias of a live
         session's arrays (the pre-arena loop duplicated items[0]'s cache
         reference into pad slots — a stale-aliasing footgun this template
-        removes)."""
-        key = (like.shape, like.dtype.str)
-        row = self._pad_rows.get(key)
-        if row is None:
-            row = self._pad_rows[key] = np.zeros(like.shape, like.dtype)
-        return row
+        removes). Buffer reuse across flushes is safe: every flush forces
+        its token rows to host before returning, which drains the device
+        work that read the previous staging contents, and jax copies host
+        operands at dispatch."""
+        n = len(group)
+        leaves = {}
+        for name, first in group[0].wire_leaves():
+            row0 = np.asarray(first)
+            key = (meta, size, name)
+            buf = self._staging.get(key)
+            if buf is None or buf.shape[1:] != row0.shape:
+                buf = self._staging[key] = np.zeros((size,) + row0.shape,
+                                                    row0.dtype)
+            buf[0] = row0
+            for i in range(1, n):
+                buf[i] = getattr(group[i], name)
+            if n < size:
+                buf[n:] = 0
+            leaves[name] = buf
+            self.host_bytes["staged"] += buf.nbytes
+            self.host_bytes["wire"] += n * row0.nbytes
+        if n < size:
+            padded = np.full(size, self.arena.capacity, np.int64)
+            padded[:n] = slots
+            slots = padded
+        return Payload(meta=meta, **leaves), slots
 
     def _decode_group(self, meta, group, slots: np.ndarray) -> None:
         """Scatter-decode one meta-group of payloads into the arena rows
-        `slots`, on device. The group is padded to `max_batch` (zero rows
-        aimed at the scratch slot) so each payload meta compiles exactly
-        once; the host only stacks the compressed wire leaves — the dense
-        view never exists host-side. `xbuf` is donated and rebound."""
-        pad = self.queue.max_batch - len(group)
-        leaves = {}
-        for name, _ in group[0].wire_leaves():
-            rows = [np.asarray(getattr(p, name)) for p in group]
-            if pad:
-                rows.extend([self._pad_row(rows[0])] * pad)
-            leaves[name] = np.stack(rows)
-        if pad:
-            slots = np.concatenate(
-                [slots, np.full(pad, self.arena.capacity, np.int64)])
-        stacked = Payload(meta=meta, **leaves)
+        `slots`, on device — the mixed-meta flush path (single-meta
+        flushes take the fused step in `_process`). The group is padded to
+        its flush bucket, so each (meta, bucket) decode compiles once and
+        the dense view never exists host-side. `xbuf` is donated and
+        rebound."""
+        stacked, slots = self._stack_group(meta, group, slots,
+                                           self._bucket(len(group)))
         self.arena.xbuf = protocol.server_decode_to_slots(
             self.arena.xbuf, stacked, slots, dtype=self.dtype,
             backend=self.backend)
@@ -333,20 +400,35 @@ class StreamingServer(FrameServerBase):
         by_meta: Dict = {}
         for i, (_, frame, _slot) in enumerate(items):
             by_meta.setdefault(frame.payload.meta, []).append(i)
-        for meta, idxs in by_meta.items():
-            self._decode_group(
-                meta, [items[i][1].payload for i in idxs],
-                np.fromiter((items[i][2] for i in idxs), np.int64,
-                            len(idxs)))
         active = np.zeros(self.arena.capacity, bool)
         for _, _, slot in items:
             active[slot] = True
-        t1 = time.perf_counter()
-        # ONE donated step over the whole arena: no cache stack/unstack,
-        # only the (capacity, 1) token rows come back to host
-        tokens, self.arena.cache = self.top_step(
-            self.params, self.arena.xbuf, self.arena.cache,
-            jnp.asarray(active))
+        if len(by_meta) == 1:
+            # single-meta flush: ONE fused dispatch — decode lands in
+            # xbuf[slots] and the donated whole-arena step runs in the
+            # same program; only the (capacity, 1) token rows come back
+            [(meta, idxs)] = by_meta.items()
+            stacked, slots = self._stack_group(
+                meta, [items[i][1].payload for i in idxs],
+                np.fromiter((items[i][2] for i in idxs), np.int64,
+                            len(idxs)),
+                self._bucket(len(idxs)))
+            t1 = time.perf_counter()
+            tokens, self.arena.xbuf, self.arena.cache = self._fused_step(
+                self.params, self.arena.xbuf, stacked, slots,
+                self.arena.cache, jnp.asarray(active))
+        else:
+            # mixed-meta flush: per-meta device decodes, then the donated
+            # step over the whole arena — no cache stack/unstack either way
+            for meta, idxs in by_meta.items():
+                self._decode_group(
+                    meta, [items[i][1].payload for i in idxs],
+                    np.fromiter((items[i][2] for i in idxs), np.int64,
+                                len(idxs)))
+            t1 = time.perf_counter()
+            tokens, self.arena.cache = self.top_step(
+                self.params, self.arena.xbuf, self.arena.cache,
+                jnp.asarray(active))
         tokens = np.asarray(tokens)
         t2 = time.perf_counter()
         for sess, frame, slot in items:
@@ -359,3 +441,4 @@ class StreamingServer(FrameServerBase):
         self.stage_s["decode"] += t1 - t0
         self.stage_s["step"] += t2 - t1
         self.stage_s["reply"] += t3 - t2
+        self.stage_tokens += len(items)

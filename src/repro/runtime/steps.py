@@ -107,3 +107,36 @@ def make_arena_top_step(cfg: ArchConfig, rt: Runtime, cut: int) -> Callable:
         return vstep(params, xbuf[: active.shape[0]], cache, active)
 
     return arena_step
+
+
+def make_fused_decode_step(top_step: Callable, *, dtype,
+                           backend=None) -> Callable:
+    """Fuse the decode->step seam into ONE dispatch.
+
+    (params, xbuf, payload, slots, cache, active) -> (tokens, xbuf, cache):
+    scatter-decode the stacked flush payload into `xbuf[slots]`
+    (`split.protocol.decode_to_slots_in_jit` — the same trace-time body as
+    the standalone slot decode, Pallas or XLA per `backend`), then run the
+    arena `top_step` on the updated buffer, all inside one jit program. The
+    serving loop's single-meta flushes (every pure-compressor mix) pay one
+    dispatch per flush instead of decode + step; jit caches one program per
+    (payload meta, flush-rows bucket).
+
+    `xbuf` (arg 1) and `cache` (arg 4) must be DONATED by the jitting
+    caller (`runtime.server`): both alias in place on TPU, and the rebound
+    outputs carry the arena forward exactly as the two-call path did.
+    Numerics are unchanged — decode and step keep their per-row dataflow;
+    tokens stay bit-identical to the separate decode + step dispatches
+    (pinned for every payload kind by tests/test_arena.py).
+    """
+    from repro.split import protocol
+
+    dtype_name = jnp.dtype(dtype).name
+
+    def fused_step(params, xbuf, payload, slots, cache, active):
+        xbuf = protocol.decode_to_slots_in_jit(
+            xbuf, payload, slots, dtype=dtype_name, backend=backend)
+        tokens, cache = top_step(params, xbuf, cache, active)
+        return tokens, xbuf, cache
+
+    return fused_step

@@ -18,7 +18,9 @@ docs/protocol.md — the normative companion of this module.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -149,11 +151,75 @@ def _transport(comp: compressors.Compressor, x, rt: Runtime, key,
 # same jit program (streaming clients/servers, real sockets).
 # ---------------------------------------------------------------------------
 
-#: host-side dense materializations performed by `server_decode` — the
-#: serving/training hot paths must keep this flat (they decode on device via
-#: `server_decode_device` / `server_decode_to_slots`); tests snapshot it
-#: around an engine run to pin "zero host-side densification".
-HOST_DENSIFY_COUNT = 0
+class HostDensifyCounter:
+    """Thread-safe count of host-side dense materializations.
+
+    Incremented by every `server_decode` call. The serving/training hot
+    paths must keep it flat (they decode on device via
+    `server_decode_device` / `server_decode_to_slots`), and it is read and
+    written across server reader threads, the serve loop, and test threads
+    — hence a locked counter, not a bare module global.
+
+    Use `watch()` to pin a region flat::
+
+        with protocol.HOST_DENSIFY_COUNT.watch() as w:
+            run_streaming(...)
+        assert w.delta == 0
+
+    `reset()` zeroes the counter and returns the prior value. `int(...)`
+    and equality against ints keep one-off reads ergonomic.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._value = 0
+
+    @property
+    def value(self) -> int:
+        with self._lock:
+            return self._value
+
+    def increment(self) -> None:
+        with self._lock:
+            self._value += 1
+
+    def reset(self) -> int:
+        with self._lock:
+            prior, self._value = self._value, 0
+            return prior
+
+    @contextlib.contextmanager
+    def watch(self):
+        outer = self
+
+        class _Watch:
+            start = outer.value
+
+            @property
+            def delta(self) -> int:
+                return outer.value - self.start
+
+        yield _Watch()
+
+    def __int__(self) -> int:
+        return self.value
+
+    def __eq__(self, other) -> bool:
+        # duck-typed: anything int()-able compares by count (this module
+        # bans type-dispatch branches, pinned in tests/test_payload.py)
+        try:
+            return self.value == int(other)
+        except (TypeError, ValueError):
+            return NotImplemented
+
+    def __repr__(self) -> str:
+        return f"HostDensifyCounter({self.value})"
+
+
+#: host-side dense materializations performed by `server_decode` — see
+#: `HostDensifyCounter`; tests watch it around an engine run to pin "zero
+#: host-side densification".
+HOST_DENSIFY_COUNT = HostDensifyCounter()
 
 
 def client_encode(comp: compressors.Compressor, x, *, key=None,
@@ -183,8 +249,7 @@ def server_decode(p: Payload, *, dtype=None):
     loops use `server_decode_device` / `server_decode_to_slots` instead, so
     only the compressed wire leaves ever cross host->device.
     """
-    global HOST_DENSIFY_COUNT
-    HOST_DENSIFY_COUNT += 1
+    HOST_DENSIFY_COUNT.increment()
     return compressors.payload_to_dense(p, dtype=dtype)
 
 
@@ -207,12 +272,31 @@ def server_decode_device(p: Payload, *, dtype=None, backend=None):
     return _decode_device_jit(p, dtype=dt, backend=backend)
 
 
-@functools.partial(jax.jit, static_argnames=("dtype", "backend"),
-                   donate_argnums=(0,))
-def _decode_to_slots_jit(xbuf, p: Payload, slots, *, dtype: str, backend):
+def decode_to_slots_in_jit(xbuf, p: Payload, slots, *, dtype, backend):
+    """Trace-time body of the slot decode — shared by `_decode_to_slots_jit`
+    and the serving runtime's fused decode+step program
+    (`runtime.steps.make_fused_decode_step`), so both paths have identical
+    numerics by construction. `backend="pallas"` runs the fused one-kernel
+    path (dequant + scatter + slot placement in a single pass, xbuf aliased
+    straight through the kernel); XLA decodes then scatters `xbuf[slots]`.
+    """
+    from repro.core import selection
+
+    if selection._resolve_backend(backend) == "pallas":
+        from repro.kernels.decode import ops as dec_ops
+
+        return dec_ops.decode_rows_to_slots(
+            xbuf, p, slots, interpret=selection._pallas_interpret())
     rows = compressors.payload_to_dense(p, dtype=jnp.dtype(dtype),
                                         backend=backend)
     return xbuf.at[slots].set(rows)
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "backend"),
+                   donate_argnums=(0,))
+def _decode_to_slots_jit(xbuf, p: Payload, slots, *, dtype: str, backend):
+    return decode_to_slots_in_jit(xbuf, p, slots, dtype=dtype,
+                                  backend=backend)
 
 
 def server_decode_to_slots(xbuf, p: Payload, slots, *, dtype=None,

@@ -174,13 +174,13 @@ def test_streaming_serves_without_host_densify():
     no per-session host cache — sessions own arena slots instead."""
     cfg = _smoke_cfg(compressor="randtopk", k=8)
     params = transformer.init_model(jax.random.key(0), cfg)
-    before = protocol.HOST_DENSIFY_COUNT
-    res = run_streaming(cfg, n_clients=4, prompt_len=2, gen=4, max_batch=4,
-                        params=params,
-                        compressor_mix=["identity", "randtopk:k=8",
-                                        "quant:bits=4",
-                                        "randtopk_quant:k=8,bits=8"])
-    assert protocol.HOST_DENSIFY_COUNT == before
+    with protocol.HOST_DENSIFY_COUNT.watch() as w:
+        res = run_streaming(cfg, n_clients=4, prompt_len=2, gen=4,
+                            max_batch=4, params=params,
+                            compressor_mix=["identity", "randtopk:k=8",
+                                            "quant:bits=4",
+                                            "randtopk_quant:k=8,bits=8"])
+        assert w.delta == 0
     assert res["tokens"].shape == (4, 4)
 
 
@@ -193,10 +193,46 @@ def test_fedtrain_trains_without_host_densify():
                           noise=0.3, seed=0)
     spec = SplitSpec(in_dim=16, hidden=32, cut_dim=32, n_classes=10,
                      method="randtopk", k=3)
-    before = protocol.HOST_DENSIFY_COUNT
-    r = run_fedtrain(spec, ds, n_clients=1, epochs=1, batch=64, seed=0)
-    assert protocol.HOST_DENSIFY_COUNT == before
+    with protocol.HOST_DENSIFY_COUNT.watch() as w:
+        r = run_fedtrain(spec, ds, n_clients=1, epochs=1, batch=64, seed=0)
+        assert w.delta == 0
     assert r["steps"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Int8 KV arena: opt-in via ArchConfig.kv_cache_bits, pinned accuracy delta
+# ---------------------------------------------------------------------------
+
+def test_int8_kv_arena_cache_layout():
+    """kv_cache_bits=8 swaps the arena KV leaves to int8 codes plus f32
+    per-(token,head) scale rows — the layout `attention` keys its dequant
+    branch on (`"k_scale" in cache`)."""
+    cfg = _smoke_cfg(compressor="randtopk", k=8)
+    params = transformer.init_model(jax.random.key(0), cfg)
+    rt8 = Runtime(mesh=None, training=False, kv_cache_bits=8)
+    cache = transformer.init_cache(params, cfg, rt8, 1, 8)
+    kv = cache["kv"]
+    assert kv["k"].dtype == jnp.int8 and kv["v"].dtype == jnp.int8
+    assert kv["k_scale"].dtype == jnp.float32
+    assert kv["k_scale"].shape == kv["k"].shape[:-1]
+
+
+def test_int8_kv_arena_serving_accuracy_delta():
+    """Serving with an int8 server-side KV arena stays within a pinned
+    token-agreement margin of the f32 reference. The quantized run must
+    also actually diverge somewhere (seed 1, gen 12 does) — otherwise a
+    regression that silently ignores `kv_cache_bits` would pass the margin
+    trivially. Clients keep f32 bottom caches either way."""
+    cfg = _smoke_cfg(compressor="randtopk", k=8)
+    assert cfg.kv_cache_bits == 0            # default: Runtime decides
+    params = transformer.init_model(jax.random.key(0), cfg)
+    kw = dict(n_clients=2, prompt_len=2, gen=12, max_batch=2,
+              params=params, seed=1)
+    f32 = run_streaming(cfg, **kw)
+    q8 = run_streaming(cfg.with_(kv_cache_bits=8), **kw)
+    agree = float((f32["tokens"] == q8["tokens"]).mean())
+    assert agree >= 0.75                     # measured 0.875
+    assert agree < 1.0                       # int8 path demonstrably active
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,172 @@
+"""Fused decode kernel family (`kernels.decode`): interpret-mode Pallas
+parity against the two-pass XLA decode for every payload kind — flat rows,
+the fused cut-projection epilogue, and the scalar-prefetched decode-to-slots
+variant with its aliasing invariants — plus the `backend=` dispatch through
+`core.compressors.payload_to_dense`."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compressors as C
+from repro.core import wire
+from repro.kernels.decode import ops as dec_ops
+from repro.split import protocol
+
+KIND_COMPRESSORS = [
+    ("dense", C.make_compressor("identity")),
+    ("slice", C.make_compressor("size_reduction", k=6)),
+    ("sparse", C.make_compressor("randtopk", k=6)),
+    ("quant", C.make_compressor("quant", bits=4)),
+    ("sparse_quant", C.make_compressor("randtopk_quant", k=6, bits=8)),
+]
+IDS = [k for k, _ in KIND_COMPRESSORS]
+
+
+def _wire_payload(comp, x):
+    """Encode + full frame round trip — exactly what the server decodes."""
+    p = protocol.client_encode(comp, x, key=jax.random.key(0), training=True)
+    frame, _ = wire.decode_frame(wire.encode_payload_frame(0, 0, p))
+    return frame.payload
+
+
+def _assert_match(kind, ref, got):
+    """dense/slice/sparse carry wire floats verbatim — bit-exact. Quant
+    kinds run one multiply-add either compiler may contract into an FMA:
+    <= 1 ulp at the largest decoded magnitude (the PR-5 convention pinned
+    in tests/test_arena.py and docs/performance.md)."""
+    if kind in ("quant", "sparse_quant"):
+        atol = float(np.spacing(np.float32(np.abs(ref).max())))
+        np.testing.assert_allclose(got, ref, rtol=0, atol=atol)
+    else:
+        np.testing.assert_array_equal(ref, got)
+
+
+# ---------------------------------------------------------------------------
+# Flat decode: fused kernel == two-pass XLA, every kind, via the backend
+# dispatch in payload_to_dense
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,comp", KIND_COMPRESSORS, ids=IDS)
+def test_decode_rows_matches_xla(kind, comp):
+    x = jnp.asarray(np.random.RandomState(0).randn(5, 1, 32).astype(
+        np.float32))
+    p = _wire_payload(comp, x)
+    assert p.meta.kind == kind
+    ref = np.asarray(C.payload_to_dense(p, backend="xla"))
+    got = np.asarray(C.payload_to_dense(p, backend="pallas"))
+    assert got.shape == ref.shape == (5, 1, 32)
+    _assert_match(kind, ref, got)
+
+
+@pytest.mark.parametrize("kind,comp", KIND_COMPRESSORS, ids=IDS)
+def test_decode_rows_odd_shapes(kind, comp):
+    """Leading shapes that exercise the row-block padding path (rows not a
+    multiple of block_rows) and a d beyond one 8-lane register row."""
+    rng = np.random.RandomState(1)
+    for shape, d in [((3,), 70), ((2, 3, 1), 256), ((1, 1, 1, 1), 48)]:
+        x = jnp.asarray(rng.randn(*shape, d).astype(np.float32))
+        p = _wire_payload(comp, x)
+        ref = np.asarray(C.payload_to_dense(p, backend="xla"))
+        got = np.asarray(dec_ops.decode_rows(p))
+        _assert_match(kind, ref, got)
+
+
+def test_decode_rows_sparse_adversarial_support():
+    """Hand-built sparse payloads: support touching both edge lanes, k=1,
+    and k=d (full support) — the compare-and-select scatter must place
+    every value exactly where put_along_axis does."""
+    d = 64
+    cases = [
+        (np.array([[0, d - 1, 7]], np.uint16), 3),
+        (np.array([[5]], np.uint16), 1),
+        (np.arange(d, dtype=np.uint16)[None, :], d),
+    ]
+    rng = np.random.RandomState(2)
+    for idx, k in cases:
+        vals = rng.randn(1, k).astype(np.float32)
+        p = C.Payload(meta=C.PayloadMeta("sparse", d=d, k=k),
+                      values=jnp.asarray(vals), indices=jnp.asarray(idx))
+        ref = np.asarray(C.payload_to_dense(p, backend="xla"))
+        got = np.asarray(C.payload_to_dense(p, backend="pallas"))
+        np.testing.assert_array_equal(ref, got)
+
+
+# ---------------------------------------------------------------------------
+# Fused cut-projection epilogue
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,comp", KIND_COMPRESSORS, ids=IDS)
+def test_decode_rows_projection_epilogue(kind, comp):
+    """decode+project in one kernel == XLA decode then matmul. The fused
+    `jnp.dot` may accumulate in a different contraction order, so the
+    comparison is allclose at f32 matmul tolerance, not bit-exact."""
+    d, proj = 32, 12
+    x = jnp.asarray(np.random.RandomState(3).randn(4, 1, d).astype(
+        np.float32))
+    w = jnp.asarray(np.random.RandomState(4).randn(d, proj).astype(
+        np.float32))
+    p = _wire_payload(comp, x)
+    ref = np.asarray(C.payload_to_dense(p, backend="xla")) @ np.asarray(w)
+    got = np.asarray(C.payload_to_dense(p, backend="pallas", project=w))
+    got_xla = np.asarray(C.payload_to_dense(p, backend="xla", project=w))
+    assert got.shape == (4, 1, proj)
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got_xla, ref, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Decode-to-slots: scalar-prefetched output indexing + xbuf aliasing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,comp", KIND_COMPRESSORS, ids=IDS)
+def test_decode_to_slots_kernel_matches_scatter(kind, comp):
+    """The aliased kernel == decode + xbuf.at[slots].set: targeted rows
+    decode in place, untouched rows keep their prior contents bit-exactly.
+    Both paths run under jit, so quant kinds see the same FMA contraction
+    and even they compare bit-exact here."""
+    n, d, cap = 3, 32, 5
+    x = jnp.asarray(np.random.RandomState(5).randn(n, 1, 1, d).astype(
+        np.float32))
+    p = _wire_payload(comp, x)
+    # xbuf is DONATED by server_decode_to_slots — fresh handle per call
+    make_xbuf = lambda: jnp.full((cap + 1, 1, 1, d), 7.0, jnp.float32)
+    slots = np.array([4, 0, 2])
+    ref = np.asarray(protocol.server_decode_to_slots(
+        make_xbuf(), p, slots, backend="xla"))
+    got = np.asarray(protocol.server_decode_to_slots(
+        make_xbuf(), p, slots, backend="pallas"))
+    np.testing.assert_array_equal(ref, got)
+    for untouched in (1, 3, 5):
+        np.testing.assert_array_equal(got[untouched], 7.0)
+
+
+def test_decode_to_slots_duplicate_scratch_targets():
+    """Pad rows aim at the same scratch slot: zero-payload rows decode to
+    zero, so duplicate targets write identical rows (benign, by design)."""
+    d, cap = 16, 3
+    vals = np.zeros((4, 1), np.float32)
+    idx = np.zeros((4, 1), np.uint16)
+    p = C.Payload(meta=C.PayloadMeta("sparse", d=d, k=1),
+                  values=jnp.asarray(vals), indices=jnp.asarray(idx))
+    xbuf = jnp.full((cap + 1, d), 7.0, jnp.float32)
+    slots = np.array([1, cap, cap, cap])     # one live row + 3 pads
+    got = np.asarray(dec_ops.decode_rows_to_slots(xbuf, p, slots))
+    np.testing.assert_array_equal(got[1], 0.0)
+    np.testing.assert_array_equal(got[cap], 0.0)
+    np.testing.assert_array_equal(got[0], 7.0)
+    np.testing.assert_array_equal(got[2], 7.0)
+
+
+def test_decode_rows_dtype_cast():
+    """`dtype=` lands on the kernel's output store, matching the XLA path's
+    astype semantics."""
+    x = jnp.asarray(np.random.RandomState(6).randn(2, 1, 16).astype(
+        np.float32))
+    p = _wire_payload(C.make_compressor("identity"), x)
+    ref = np.asarray(C.payload_to_dense(p, dtype=jnp.bfloat16,
+                                        backend="xla"))
+    got = np.asarray(C.payload_to_dense(p, dtype=jnp.bfloat16,
+                                        backend="pallas"))
+    assert got.dtype == ref.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(ref, got)
