@@ -1,0 +1,194 @@
+"""Production-traffic bench: open-loop load + SLO gate for the QoS ladder.
+
+Drives the virtual-clock load generator (`repro.runtime.loadgen`) over the
+real serving stack and gates the PR's operational claim: under a seeded
+2x overload burst (2-state MMPP arrivals), a fleet whose sessions adapt
+(k, bits) down a randomized-top-k ladder under congestion
+(`runtime.qos.QoSController`) holds the declared p99 token-latency SLO
+with no admission rejections, while the byte-identical static fleet —
+same seed, same arrivals, same server — blows the deadline or rejects
+sessions. Shedding *bytes* instead of *sessions* is the serving-side
+payoff of the paper's accuracy-per-byte result: randomized top-k degrades
+fidelity gracefully as k tightens, so the QoS floor trades a little
+fidelity for a lot of latency headroom.
+
+Everything is deterministic (virtual time, seeded arrivals/fleet/faults):
+the gate compares exact numbers, not noisy wall-clock medians. The full
+(non-smoke) run adds a heterogeneous calm-fleet scenario (mixed
+compressors, think times, bandwidth caps) and a longer burst at a second
+seed. Results land in the repo-root `BENCH_serve.json` under `loadgen`,
+merged into (never clobbering) the serving-throughput section.
+
+    PYTHONPATH=src python benchmarks/loadgen.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+import jax
+
+import repro.configs as configs
+from repro.models import transformer
+from repro.models.config import SplitConfig
+from repro.runtime.loadgen import (ArrivalSpec, FleetSpec, LoadGenConfig,
+                                   ServiceModel, SLOSpec, run_loadgen)
+from repro.runtime.qos import QoSSpec
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+BENCH_PATH = ROOT / "BENCH_serve.json"
+
+#: declared SLO for the burst gate: p99 token latency and admission
+#: rejections. The static fleet's p99 measures ~2x this ceiling under the
+#: burst; the adaptive fleet holds ~30% under it — both deterministic.
+SLO = SLOSpec(p99_ms=60.0, max_reject_frac=0.02)
+
+#: the mixed calm fleet keeps 10% `identity` sessions, and one dense
+#: d_model=256 frame costs ~31ms of modeled service time alone
+#: (`ServiceModel.per_byte_s` x ~1KB) — a deliberately looser declared
+#: ceiling for a fleet that ships dense frames; the compressed-only burst
+#: fleets are graded against the tight `SLO` above
+MIXED_SLO = SLOSpec(p99_ms=150.0, max_reject_frac=0.02)
+
+#: 2x overload: calm arrivals at ~0.75 of the static fleet's service
+#: capacity, bursts at ~1.5x of it (the service model is host-byte-bound,
+#: `ServiceModel.per_byte_s`, so capacity scales with frame size)
+ARRIVALS = ArrivalSpec(process="mmpp", rate=22.0, burst_rate=44.0,
+                       mean_calm_s=2.0, mean_burst_s=3.0)
+SERVICE = ServiceModel(flush_overhead_s=1e-3, per_row_s=1e-4,
+                       per_byte_s=3e-5)
+FLEET = FleetSpec(compressors=("randtopk:k=16",), prompt_len=(2, 3),
+                  gen=(5, 8), bandwidth_Bps=400_000.0)
+
+#: the adaptive fleet's declared envelope: the same randtopk:k=16 spec at
+#: the top, tightening by halves to k=4 under congestion
+def _qos(d: int) -> QoSSpec:
+    return QoSSpec(k=16, d=d, k_floor=4, high_depth=6, low_depth=2,
+                   deadline_s=0.04, patience=16, cooldown=1)
+
+
+def _scenario(seed: int, duration_s: float, qos) -> LoadGenConfig:
+    return LoadGenConfig(seed=seed, duration_s=duration_s,
+                         arrivals=ARRIVALS, fleet=FLEET, service=SERVICE,
+                         slo=SLO, qos=qos, capacity=32, max_batch=8,
+                         max_wait=0.004, admission_depth=48)
+
+
+def _strip(report: dict) -> dict:
+    """BENCH-sized copy: drop the per-event traces (tests use those) and
+    the one nondeterministic field."""
+    out = {k: v for k, v in report.items()
+           if k not in ("trace", "wall_s_real")}
+    out["arrivals"] = {k: v for k, v in report["arrivals"].items()
+                       if k != "state_path"}
+    return out
+
+
+def _emit_run(emit, name: str, r: dict) -> None:
+    lat = r["latency_ms"]
+    emit(f"loadgen,{name},arrived={r['sessions']['arrived']},"
+         f"completed={r['sessions']['completed']},"
+         f"rejected={r['sessions']['rejected']},"
+         f"failed={r['sessions']['failed']}")
+    emit(f"loadgen,{name},goodput_tok_per_s={r['goodput_tok_per_s']},"
+         f"p50_ms={lat['p50_ms']},p95_ms={lat['p95_ms']},"
+         f"p99_ms={lat['p99_ms']},depth_max={r['queue_depth']['max']},"
+         f"mean_fill={r['mean_batch_fill']}")
+    emit(f"loadgen,{name},p2_p50_ms={lat['p2_p50_ms']},"
+         f"p2_p95_ms={lat['p2_p95_ms']},p2_p99_ms={lat['p2_p99_ms']}")
+    if r["qos"]["enabled"]:
+        emit(f"loadgen,{name},qos_switches={r['qos']['switches']},"
+             f"level_hist={'/'.join(f'{k}:{v}' for k, v in r['qos']['level_hist'].items())}")
+
+
+def main(emit=print, smoke: bool = False) -> bool:
+    cfg = configs.get("qwen3-8b", smoke=True).with_(
+        split=SplitConfig(cut_layer=1, compressor="randtopk", k=16))
+    params = transformer.init_model(jax.random.key(0), cfg)
+    duration = 10.0 if smoke else 20.0
+    qos = _qos(cfg.d_model)
+
+    # -- the gate: 2x overload burst, static vs adaptive, same seed --------
+    static = run_loadgen(cfg, _scenario(7, duration, None), params=params)
+    adaptive = run_loadgen(cfg, _scenario(7, duration, qos), params=params)
+    _emit_run(emit, "static", static)
+    _emit_run(emit, "adaptive", adaptive)
+
+    adaptive_ok = (adaptive["slo"]["ok"]
+                   and adaptive["sessions"]["failed"] == 0)
+    static_violates = not static["slo"]["ok"]
+    no_sleeps = (static["cv_waits"] == 0 and adaptive["cv_waits"] == 0)
+    # the streaming P² estimate must track the exact p99 it will replace
+    # at scale (parity is pinned tighter on adversarial distributions in
+    # tests/test_loadgen.py; this checks the live traffic distribution)
+    p2_ok = all(
+        abs(r["latency_ms"]["p2_p99_ms"] - r["latency_ms"]["p99_ms"])
+        <= 0.25 * r["latency_ms"]["p99_ms"]
+        for r in (static, adaptive))
+    emit(f"loadgen_check,adaptive,holds_p99_slo_under_burst,{adaptive_ok}")
+    emit(f"loadgen_check,static,violates_slo_under_burst,{static_violates}")
+    emit(f"loadgen_check,harness,virtual_clock_no_real_sleeps,{no_sleeps}")
+    emit(f"loadgen_check,quantiles,p2_tracks_exact_p99,{p2_ok}")
+    ok = adaptive_ok and static_violates and no_sleeps and p2_ok
+
+    section = {"smoke": bool(smoke), "arch": cfg.name,
+               "slo": {"p99_ms": SLO.p99_ms,
+                       "max_reject_frac": SLO.max_reject_frac},
+               "qos_ladder": [list(r) for r in qos.ladder()],
+               "static": _strip(static), "adaptive": _strip(adaptive)}
+
+    if not smoke:
+        # heterogeneous calm fleet: mixed compressor population, think
+        # times, tighter bandwidth — the report scenario (no gate beyond
+        # completing within SLO at calm utilization)
+        calm = LoadGenConfig(
+            seed=13, duration_s=duration,
+            arrivals=ArrivalSpec(process="poisson", rate=10.0),
+            fleet=FleetSpec(
+                compressors=("randtopk:k=16", "randtopk_quant:k=16,bits=8",
+                             "identity"),
+                weights=(0.6, 0.3, 0.1), prompt_len=(2, 4), gen=(4, 8),
+                think_s=0.02, bandwidth_Bps=200_000.0),
+            service=SERVICE, slo=MIXED_SLO, qos=None, capacity=32,
+            max_batch=8, max_wait=0.004, admission_depth=48)
+        mixed = run_loadgen(cfg, calm, params=params)
+        _emit_run(emit, "mixed_fleet", mixed)
+        mixed_ok = (mixed["slo"]["ok"] and mixed["sessions"]["failed"] == 0)
+        emit(f"loadgen_check,mixed_fleet,calm_within_slo,{mixed_ok}")
+        ok &= mixed_ok
+        section["mixed_fleet"] = _strip(mixed)
+
+        # second seed for the burst gate: the qualitative outcome must not
+        # be a one-seed accident
+        static2 = run_loadgen(cfg, _scenario(11, duration, None),
+                              params=params)
+        adaptive2 = run_loadgen(cfg, _scenario(11, duration, qos),
+                                params=params)
+        _emit_run(emit, "static_seed11", static2)
+        _emit_run(emit, "adaptive_seed11", adaptive2)
+        seed2_ok = (adaptive2["slo"]["ok"] and not static2["slo"]["ok"])
+        emit(f"loadgen_check,seed11,adaptive_beats_static,{seed2_ok}")
+        ok &= seed2_ok
+
+    section["ok"] = bool(ok)
+    # merge into the serving bench's JSON without clobbering its gate
+    data = {}
+    if BENCH_PATH.exists():
+        try:
+            data = json.loads(BENCH_PATH.read_text())
+        except ValueError:
+            data = {}
+    data["loadgen"] = section
+    BENCH_PATH.write_text(json.dumps(data, indent=2) + "\n")
+    emit(f"loadgen,wrote,{BENCH_PATH.name}")
+    return ok
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="burst gate only, 10s virtual duration")
+    args = ap.parse_args()
+    sys.exit(0 if main(smoke=args.smoke) else 1)

@@ -27,7 +27,7 @@ def main() -> None:
     from benchmarks import (alpha_sweep, appendixB_privacy,
                             combined_compression, error_feedback,
                             fedtrain_convergence, fig2_toy,
-                            fig4_convergence, fig5_distribution,
+                            fig4_convergence, fig5_distribution, loadgen,
                             roofline_report, serve_throughput, table2_sizes,
                             table3_accuracy, table7_dbpedia_geometry,
                             wire_packing)
@@ -46,6 +46,7 @@ def main() -> None:
         "roofline": roofline_report.main,
         "wire": wire_packing.main,
         "serve": serve_throughput.main,
+        "loadgen": loadgen.main,
         "fedtrain": fedtrain_convergence.main,
     }
     chosen = (args.only.split(",") if args.only else list(sections))

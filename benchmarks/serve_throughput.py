@@ -325,6 +325,15 @@ def main(emit=print, smoke: bool = False) -> bool:
              "gate_stage_us_per_token": gate_stage,
              "roofline": roofline_rows,
              "rows": all_rows, "ok": bool(ok_all)}
+    # benchmarks/loadgen.py owns the `loadgen` section of the same file;
+    # carry it across this bench's rewrite instead of clobbering it
+    if BENCH_PATH.exists():
+        try:
+            prev = json.loads(BENCH_PATH.read_text())
+        except ValueError:
+            prev = {}
+        if "loadgen" in prev:
+            point["loadgen"] = prev["loadgen"]
     BENCH_PATH.write_text(json.dumps(point, indent=2) + "\n")
     emit(f"serve,wrote,{BENCH_PATH.name}")
     return ok_all

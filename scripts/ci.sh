@@ -34,6 +34,14 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/chaos_smoke.py
 # roofline rows.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/serve_throughput.py --smoke
 
+# production-traffic SLO gate: open-loop MMPP arrivals on a virtual clock
+# over the real frame/ARQ/arena path — under the seeded 2x overload burst
+# the QoS-adaptive (k, bits) fleet must hold the declared p99 token-latency
+# SLO with no rejected sessions while the static comparator violates it;
+# fully deterministic (exact comparison, no jitter tolerance). Merges a
+# `loadgen` section into BENCH_serve.json.
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/loadgen.py --smoke
+
 # fedtrain smoke: over-the-wire split training; randtopk bytes must match
 # the Table-2 fwd+bwd analytics, adaptive-k and async must hold
 # accuracy-per-measured-byte >= fixed-k topk

@@ -60,15 +60,71 @@ class ScheduleSpec:
         assert 0.0 < self.drop < 1.0
 
 
+class EmaPlateau:
+    """EMA-smoothed plateau detector — the one copy of the "has this
+    signal stopped improving?" state machine shared by `KScheduler`
+    (training loss) and `runtime.qos.QoSController` (queue pressure).
+
+    `observe(x)` folds `x` into an EMA and returns True when `patience`
+    consecutive observations have passed without the EMA improving
+    (dropping) by a relative `min_rel_improve` over the best seen —
+    resetting the baseline to the current EMA so consecutive plateaus can
+    fire again. `smooth(x)` updates the EMA without plateau tracking (the
+    detector's counters stay frozen, exactly the pre-refactor behavior of
+    a scheduler at its floor).
+    """
+
+    def __init__(self, ema: float, min_rel_improve: float, patience: int):
+        self.ema = ema
+        self.min_rel_improve = min_rel_improve
+        self.patience = patience
+        self.value = float("nan")
+        self.best = float("inf")
+        self.since = 0
+
+    def smooth(self, x: float) -> float:
+        self.value = (x if np.isnan(self.value)
+                      else self.ema * self.value + (1 - self.ema) * x)
+        return self.value
+
+    def observe(self, x: float) -> bool:
+        self.smooth(x)
+        if self.value < self.best * (1 - self.min_rel_improve):
+            self.best = self.value
+            self.since = 0
+            return False
+        self.since += 1
+        if self.since >= self.patience:
+            self.since = 0
+            self.best = self.value
+            return True
+        return False
+
+    # checkpointable state (numpy scalars, `checkpoint.store`-compatible)
+
+    def state(self) -> dict:
+        return {"ema": np.float32(self.value),
+                "best": np.float32(self.best),
+                "since": np.int32(self.since)}
+
+    def load_state(self, st: dict) -> None:
+        self.value = float(st["ema"])
+        self.best = float(st["best"])
+        self.since = int(st["since"])
+
+
 class KScheduler:
     """Stateful (k, bits) schedule — one per `TrainingClient`."""
 
     def __init__(self, spec: ScheduleSpec):
         self.spec = spec
         self.cur_k = spec.k         # plateau-adapted target
-        self.ema_loss = float("nan")
-        self.best = float("inf")
-        self.since = 0
+        self._plateau = EmaPlateau(spec.ema, spec.min_rel_improve,
+                                   spec.patience)
+
+    @property
+    def ema_loss(self) -> float:
+        return self._plateau.value
 
     def k_bits(self, step: int) -> tuple:
         """(k, bits) to encode sync step `step` with. k == d means dense."""
@@ -88,30 +144,17 @@ class KScheduler:
     def observe(self, loss: float) -> None:
         """Feed back one sync step's loss (from the grad frame)."""
         s = self.spec
-        self.ema_loss = (loss if np.isnan(self.ema_loss)
-                         else s.ema * self.ema_loss + (1 - s.ema) * loss)
         if not s.k_min or s.k_min >= self.cur_k:
+            self._plateau.smooth(loss)      # EMA tracks, counters frozen
             return
-        if self.ema_loss < self.best * (1 - s.min_rel_improve):
-            self.best = self.ema_loss
-            self.since = 0
-            return
-        self.since += 1
-        if self.since >= s.patience:
+        if self._plateau.observe(loss):
             self.cur_k = max(s.k_min, int(self.cur_k * s.drop))
-            self.since = 0
-            self.best = self.ema_loss
 
     # -- checkpoint state ----------------------------------------------------
 
     def state(self) -> dict:
-        return {"cur_k": np.int32(self.cur_k),
-                "ema": np.float32(self.ema_loss),
-                "best": np.float32(self.best),
-                "since": np.int32(self.since)}
+        return {"cur_k": np.int32(self.cur_k), **self._plateau.state()}
 
     def load_state(self, st: dict) -> None:
         self.cur_k = int(st["cur_k"])
-        self.ema_loss = float(st["ema"])
-        self.best = float(st["best"])
-        self.since = int(st["since"])
+        self._plateau.load_state(st)

@@ -9,6 +9,16 @@ against the Table-2 analytic prediction.
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
         --clients 8 --prompt-len 16 --gen 32 --split randtopk --k 16
+
+`--loadgen` switches the driver to the open-loop production-traffic
+harness (`repro.runtime.loadgen`, docs/serving-slo.md): seeded Poisson or
+MMPP-burst session arrivals over the same stack under a virtual clock,
+graded against a declared SLO, optionally with the congestion-adaptive
+(k, bits) QoS controller:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
+        --split randtopk --k 16 --loadgen --arrival mmpp --rate 22 \
+        --duration 10 --slo-p99-ms 60 --qos
 """
 from __future__ import annotations
 
@@ -19,6 +29,50 @@ import numpy as np
 import repro.configs as configs
 from repro.models.config import SplitConfig
 from repro.runtime import engine
+from repro.runtime.loadgen import (ArrivalSpec, FleetSpec, LoadGenConfig,
+                                   SLOSpec, run_loadgen)
+from repro.runtime.qos import QoSSpec
+
+
+def _run_loadgen(cfg, args) -> None:
+    qos = None
+    if args.qos:
+        qos = QoSSpec(k=args.k, d=cfg.d_model, k_floor=args.k_floor,
+                      high_depth=6, low_depth=2,
+                      deadline_s=args.slo_p99_ms / 1e3 / 2,
+                      patience=16, cooldown=1)
+    lg = LoadGenConfig(
+        seed=args.seed, duration_s=args.duration,
+        arrivals=ArrivalSpec(process=args.arrival, rate=args.rate,
+                             burst_rate=args.burst_rate),
+        fleet=FleetSpec(compressors=(f"{args.split or 'randtopk'}:"
+                                     f"k={args.k}",)
+                        if args.split != "identity" else ("identity",),
+                        prompt_len=(2, max(2, args.prompt_len)),
+                        gen=(2, max(2, args.gen)),
+                        bandwidth_Bps=args.bandwidth),
+        slo=SLOSpec(p99_ms=args.slo_p99_ms,
+                    max_reject_frac=args.max_reject_frac),
+        qos=qos, capacity=args.capacity,
+        max_batch=args.max_batch or 8, max_wait=args.max_wait,
+        admission_depth=args.admission_depth)
+    rep = run_loadgen(cfg, lg)
+    lat, s = rep["latency_ms"], rep["sessions"]
+    print(f"loadgen: {s['arrived']} arrivals over "
+          f"{rep['virtual_duration_s']:.1f}s virtual "
+          f"({rep['wall_s_real']:.1f}s real), {s['completed']} completed, "
+          f"{s['rejected']} rejected, {s['failed']} failed")
+    print(f"goodput {rep['goodput_tok_per_s']:.1f} tok/s; latency p50 "
+          f"{lat['p50_ms']:.1f} / p95 {lat['p95_ms']:.1f} / p99 "
+          f"{lat['p99_ms']:.1f} ms (streaming P2 p99 "
+          f"{lat['p2_p99_ms']:.1f}); queue depth max "
+          f"{rep['queue_depth']['max']}")
+    if rep["qos"]["enabled"]:
+        print(f"qos: ladder {rep['qos']['ladder']}, "
+              f"{rep['qos']['switches']} rung switches, "
+              f"level hist {rep['qos']['level_hist']}")
+    print(f"SLO {'MET' if rep['slo']['ok'] else 'VIOLATED'}: "
+          f"{rep['slo']['checks']}")
 
 
 def main(argv=None):
@@ -35,6 +89,30 @@ def main(argv=None):
                     help="server flush size (default min(8, clients))")
     ap.add_argument("--max-wait", type=float, default=0.01,
                     help="server batching window in seconds")
+    lgrp = ap.add_argument_group("loadgen", "open-loop traffic + SLO mode")
+    lgrp.add_argument("--loadgen", action="store_true",
+                      help="run the open-loop load generator instead of "
+                           "the closed-loop client fleet")
+    lgrp.add_argument("--arrival", choices=("poisson", "mmpp"),
+                      default="poisson")
+    lgrp.add_argument("--rate", type=float, default=20.0,
+                      help="session arrivals per second (calm state)")
+    lgrp.add_argument("--burst-rate", type=float, default=0.0,
+                      help="mmpp burst arrival rate (0 = 2x --rate)")
+    lgrp.add_argument("--duration", type=float, default=10.0,
+                      help="virtual seconds of arrivals")
+    lgrp.add_argument("--seed", type=int, default=0)
+    lgrp.add_argument("--slo-p99-ms", type=float, default=100.0)
+    lgrp.add_argument("--max-reject-frac", type=float, default=0.02)
+    lgrp.add_argument("--qos", action="store_true",
+                      help="congestion-adaptive (k, bits) ladder")
+    lgrp.add_argument("--k-floor", type=int, default=4)
+    lgrp.add_argument("--capacity", type=int, default=32,
+                      help="arena slots / max concurrent sessions")
+    lgrp.add_argument("--admission-depth", type=int, default=48,
+                      help="reject arrivals above this queue backlog")
+    lgrp.add_argument("--bandwidth", type=float, default=400_000.0,
+                      help="per-client link bytes/s (0 = infinite)")
     args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch, smoke=args.smoke)
@@ -42,6 +120,9 @@ def main(argv=None):
         cfg = cfg.with_(split=SplitConfig(
             cut_layer=max(1, cfg.n_layers // 2), compressor=args.split,
             k=args.k))
+
+    if args.loadgen:
+        return _run_loadgen(cfg, args)
 
     res = engine.run_streaming(
         cfg, n_clients=args.clients, prompt_len=args.prompt_len,

@@ -7,16 +7,28 @@ session-slot `arena` and runs one donated masked top step over it
 (`batching` queue, `session` accounting, `steps` jit-able halves);
 `engine.run_streaming` wires N clients to one server and reports measured
 bytes per session. The hot-path design lives in docs/performance.md.
+
+Production-traffic layer: `loadgen.run_loadgen` drives hundreds of
+open-loop sessions over the same stack under a deterministic virtual
+clock, `metrics` holds the streaming quantile estimators its SLO report
+uses, and `qos.QoSController` adapts each session's (k, bits) under
+congestion — see docs/serving-slo.md.
 """
 from repro.runtime import steps
 from repro.runtime.arena import SlotArena
-from repro.runtime.batching import BatchingQueue
+from repro.runtime.batching import BatchingQueue, QueueFull
 from repro.runtime.client import StreamingClient
 from repro.runtime.engine import run_streaming
+from repro.runtime.loadgen import (ArrivalSpec, FleetSpec, LoadGenConfig,
+                                   ServiceModel, SLOSpec, run_loadgen)
+from repro.runtime.metrics import LatencyStats, P2Quantile
+from repro.runtime.qos import QoSController, QoSSpec
 from repro.runtime.server import StreamingServer
 from repro.runtime.session import Session, SessionStats
 from repro.runtime.transport import Endpoint, channel_pair
 
-__all__ = ["BatchingQueue", "SlotArena", "StreamingClient", "StreamingServer",
-           "Session", "SessionStats", "Endpoint", "channel_pair",
-           "run_streaming", "steps"]
+__all__ = ["ArrivalSpec", "BatchingQueue", "Endpoint", "FleetSpec",
+           "LatencyStats", "LoadGenConfig", "P2Quantile", "QoSController",
+           "QoSSpec", "QueueFull", "SLOSpec", "ServiceModel", "Session",
+           "SessionStats", "SlotArena", "StreamingClient", "StreamingServer",
+           "channel_pair", "run_loadgen", "run_streaming", "steps"]

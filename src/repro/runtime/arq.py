@@ -30,12 +30,21 @@ byte-identical to the pre-ARQ behavior.
 from __future__ import annotations
 
 from repro.core import wire
+from repro.testing.clock import SYSTEM_CLOCK
 
 
 class ArqClientMixin:
-    """Retry / reconnect / dedup recovery loop for a lock-step client."""
+    """Retry / reconnect / dedup recovery loop for a lock-step client.
+
+    `clock` is the injectable time source behind every latency stamp the
+    subclass takes; the blocking `_await_reply` path itself waits on the
+    transport (SYSTEM_CLOCK mode), while the event-driven loadgen harness
+    replaces the wait with scheduled retry events on a `VirtualClock` and
+    reuses `_accept_reply` / `_retransmit` / `_reconnect` unchanged.
+    """
 
     _reply_kind: int                    # wire.FRAME_TOKENS / FRAME_GRAD
+    clock = SYSTEM_CLOCK
 
     def _count_reply(self, reply: wire.Frame) -> None:
         raise NotImplementedError
@@ -58,6 +67,24 @@ class ArqClientMixin:
         self.stats.count_up(header_nbytes,
                             len(frame_bytes) - header_nbytes)
         self.endpoint.send(frame_bytes)
+
+    def _accept_reply(self, reply: wire.Frame, step: int):
+        """Classify one received reply for in-flight `step`: returns the
+        frame when it acks `step`, None for a counted stale duplicate
+        (seq < step — a server re-ack of a replayed frame), and raises
+        `wire.WireError` on a protocol violation (wrong kind, wrong
+        session, or a seq from the future the stop-and-wait discipline
+        can never produce)."""
+        if reply.kind == self._reply_kind and reply.session == self.id:
+            self._count_reply(reply)
+            if reply.seq == step:
+                return reply
+            if reply.seq < step:
+                self.stats.duplicates += 1      # stale re-ack, drop
+                return None
+        raise wire.WireError(
+            f"session {self.id}: unexpected reply kind={reply.kind} "
+            f"seq={reply.seq} while awaiting step {step}")
 
     def _await_reply(self, step: int, frame_bytes: bytes,
                      header_nbytes: int) -> wire.Frame:
@@ -90,13 +117,6 @@ class ArqClientMixin:
                     self._reconnect()   # escape a stalled reader
                 self._retransmit(frame_bytes, header_nbytes)
                 continue
-            if reply.kind == self._reply_kind and reply.session == self.id:
-                self._count_reply(reply)
-                if reply.seq == step:
-                    return reply
-                if reply.seq < step:
-                    self.stats.duplicates += 1      # stale re-ack, drop
-                    continue
-            raise wire.WireError(
-                f"session {self.id}: unexpected reply kind={reply.kind} "
-                f"seq={reply.seq} while awaiting step {step}")
+            got = self._accept_reply(reply, step)
+            if got is not None:
+                return got

@@ -17,7 +17,6 @@ byte-identical to the pre-ARQ loop.
 """
 from __future__ import annotations
 
-import time
 from typing import Callable, Optional
 
 import jax
@@ -26,6 +25,7 @@ import numpy as np
 from repro.core import wire
 from repro.runtime.arq import ArqClientMixin
 from repro.runtime.session import SessionStats
+from repro.testing.clock import Clock, SYSTEM_CLOCK
 
 
 class StreamingClient(ArqClientMixin):
@@ -38,8 +38,10 @@ class StreamingClient(ArqClientMixin):
                  reply_timeout: float = 60.0,
                  retry_timeout: Optional[float] = None,
                  max_retries: int = 16,
-                 reconnect: Optional[Callable] = None):
+                 reconnect: Optional[Callable] = None,
+                 clock: Clock = SYSTEM_CLOCK):
         self.id = session_id
+        self.clock = clock
         self.params = params
         self.cache = cache
         self.bottom_step = bottom_step          # jitted shared per compressor
@@ -75,14 +77,14 @@ class StreamingClient(ArqClientMixin):
                                                    token)
             payload = jax.tree.map(np.asarray, payload)  # device -> host
             frame_bytes = wire.encode_payload_frame(self.id, step, payload)
-            t_send = time.perf_counter()
+            t_send = self.clock.monotonic()
             self.endpoint.send(frame_bytes)
             hb = wire.payload_frame_header_nbytes(payload)
             self.stats.count_up(header_nbytes=hb,
                                 payload_nbytes=len(frame_bytes) - hb)
 
             reply = self._await_reply(step, frame_bytes, hb)
-            self.latencies.append(time.perf_counter() - t_send)
+            self.latencies.append(self.clock.monotonic() - t_send)
             nxt = int(reply.tokens[0])
             if step + 1 < len(self.prompt):
                 token = np.asarray([[self.prompt[step + 1]]], np.int32)

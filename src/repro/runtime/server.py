@@ -51,6 +51,7 @@ from repro.runtime.arena import SlotArena
 from repro.runtime.batching import BatchingQueue
 from repro.runtime.session import Session
 from repro.split import protocol
+from repro.testing.clock import Clock, SYSTEM_CLOCK
 
 
 def jit_serving_steps(top_step: Callable, *, dtype,
@@ -180,6 +181,48 @@ class FrameServerBase:
             if done:
                 self.queue.close()          # serve loop drains, then exits
 
+    def pump(self, endpoint, sid_seen: Optional[int] = None):
+        """Single-threaded counterpart of `_read_loop`: drain every frame
+        currently available on `endpoint` without blocking, enqueueing
+        payload frames exactly as the reader thread would.
+
+        Returns `(status, sid_seen)` — the caller (a virtual-clock event
+        loop, `runtime.loadgen`) owns the connection lifecycle the reader
+        thread normally owns: `status` is `"open"` (keep pumping this
+        connection later), `"retired"` (a malformed frame was rejected
+        with an error frame, or the peer abandoned the connection — stop
+        pumping it; the session survives for a reconnect), or `"closed"`
+        (the session's CLOSE frame arrived). `sid_seen` must be passed
+        back on the next pump of the same connection so a fault is
+        charged to the right session, mirroring `_read_loop`'s per-
+        connection state.
+        """
+        while True:
+            try:
+                frame = endpoint.recv_frame(timeout=0.0)
+            except wire.WireError as e:
+                self._reject(endpoint, sid_seen, e)
+                return "retired", sid_seen
+            if frame is None:
+                return "open", sid_seen
+            if frame.kind == wire.FRAME_CLOSE:
+                with self._lock:
+                    if frame.session in self.sessions:
+                        self.sessions[frame.session].closed = True
+                return "closed", sid_seen
+            if frame.kind == wire.FRAME_ERROR:
+                return "retired", sid_seen      # peer abandoned this conn
+            if frame.kind != wire.FRAME_PAYLOAD:
+                e = wire.WireError(
+                    f"unexpected frame kind {frame.kind} on the "
+                    f"{self.direction} up direction")
+                self._reject(endpoint, sid_seen, e)
+                return "retired", sid_seen
+            sid_seen = frame.session
+            sess = self._session_for(frame.session, endpoint)
+            sess.stats.count_up(frame.header_nbytes, frame.payload_nbytes)
+            self.queue.put((sess, frame))       # QueueFull surfaces to caller
+
     def _session_for(self, sid: int, endpoint) -> Session:
         with self._lock:
             sess = self.sessions.get(sid)
@@ -206,7 +249,7 @@ class StreamingServer(FrameServerBase):
                  *, max_batch: int = 8, max_wait: float = 0.01,
                  dtype=jnp.float32, capacity: Optional[int] = None,
                  x_shape=None, backend: Optional[str] = None,
-                 jit_steps=None):
+                 jit_steps=None, clock: Clock = SYSTEM_CLOCK):
         self.params = params
         # `jit_steps` (a `jit_serving_steps` pair) lets the engine share
         # compiled programs across runs; direct construction from a bare
@@ -221,7 +264,8 @@ class StreamingServer(FrameServerBase):
         self.stage_s = {"decode": 0.0, "step": 0.0, "reply": 0.0}
         self.stage_tokens = 0               # tokens served by those flushes
         #   (normalizes stage_s to per-token stage costs in the bench)
-        self._init_connections(BatchingQueue(max_batch, max_wait))
+        self._init_connections(BatchingQueue(max_batch, max_wait,
+                                             clock=clock))
         self.arena: Optional[SlotArena] = None
         self._make_cache = make_cache
         self._capacity = capacity or max_batch

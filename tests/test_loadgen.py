@@ -1,0 +1,511 @@
+"""Load-generator, SLO-harness, QoS-ladder, and streaming-quantile tests.
+
+Four satellite suites around `runtime.loadgen` (docs/serving-slo.md):
+
+  * P² streaming-quantile parity against exact numpy quantiles on
+    adversarial distributions (bimodal, heavy-tail, constant) — parity is
+    asserted in *rank space* (the empirical CDF position of the estimate),
+    which is the scale-free way to compare quantile estimators;
+  * KScheduler / QoSController edge cases: plateau drops landing inside
+    the anneal window (the `max(cur_k, k)` clamp), floor freezing, ladder
+    construction, tighten/relax hysteresis, cooldown rate-limiting, and
+    state round-trips through `checkpoint.store` npz files;
+  * BatchingQueue admission/backpressure under an open-loop producer on a
+    `VirtualClock`: bounded depth via `QueueFull`, no lost or duplicated
+    items, the PR-6 wake policy intact, and `next_flush_at`-scheduled
+    flushes that never leave the event loop waiting (`waits == 0`);
+  * determinism fuzz over the full co-simulation: same seed -> the SLO
+    report is identical field-for-field (everything but `wall_s_real`),
+    clean and under seeded `FaultInjector` chaos, plus the mini version of
+    the bench's burst gate (adaptive fleet beats static at equal seed).
+"""
+import random
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.checkpoint import store
+from repro.fedtrain.schedule import EmaPlateau, KScheduler, ScheduleSpec
+from repro.models import transformer
+from repro.models.config import SplitConfig
+from repro.runtime.batching import BatchingQueue, QueueFull
+from repro.runtime.loadgen import (ArrivalSpec, FleetSpec, LoadGenConfig,
+                                   ServiceModel, SLOSpec, _Arrivals,
+                                   evaluate_slo, run_loadgen)
+from repro.runtime.metrics import LatencyStats, P2Quantile
+from repro.runtime.qos import QoSController, QoSSpec, compressor_spec
+from repro.testing import FaultInjector, FaultPlan, VirtualClock
+
+QS = (0.50, 0.95, 0.99)
+
+
+# -- P2 streaming quantiles vs exact ------------------------------------------
+
+def _rank(samples: np.ndarray, v: float) -> float:
+    """Empirical CDF position of `v` within `samples` (rank space)."""
+    s = np.sort(samples)
+    return float(np.searchsorted(s, v, side="right")) / len(s)
+
+
+def _bimodal(rng, n):
+    xs = np.concatenate([rng.normal(0.0, 1.0, n // 2),
+                         rng.normal(8.0, 0.25, n - n // 2)])
+    return rng.permutation(xs)
+
+
+def _heavy_tail(rng, n):
+    return rng.pareto(1.5, n) + 1.0      # infinite-variance tail
+
+
+@pytest.mark.parametrize("dist", [_bimodal, _heavy_tail],
+                         ids=["bimodal", "heavy_tail"])
+def test_p2_rank_parity_adversarial(dist):
+    rng = np.random.default_rng(0)
+    xs = dist(rng, 4000)
+    for q in QS:
+        est = P2Quantile(q)
+        for x in xs:
+            est.add(x)
+        # the estimate must sit at the right *rank* of the empirical
+        # distribution — scale-free, so one tolerance fits a clean bimodal
+        # and a Pareto tail alike
+        assert abs(_rank(xs, est.value()) - q) <= 0.025, \
+            f"q={q}: estimate {est.value()} at rank {_rank(xs, est.value())}"
+
+
+def test_p2_constant_distribution_is_exact():
+    for q in QS:
+        est = P2Quantile(q)
+        for _ in range(1000):
+            est.add(7.0)
+        assert est.value() == 7.0
+
+
+def test_p2_exact_below_five_samples():
+    est = P2Quantile(0.5)
+    for x in (1.0, 9.0, 4.0):
+        est.add(x)
+    assert est.value() == float(np.quantile([1.0, 9.0, 4.0], 0.5))
+    assert np.isnan(P2Quantile(0.5).value())
+
+
+def test_p2_estimate_stays_inside_observed_range():
+    rng = np.random.default_rng(3)
+    xs = _heavy_tail(rng, 2000)
+    est = P2Quantile(0.99)
+    for x in xs:
+        est.add(x)
+    assert xs.min() <= est.value() <= xs.max()
+
+
+def test_latency_stats_reports_exact_next_to_streaming():
+    rng = np.random.default_rng(1)
+    xs = _bimodal(rng, 1500) + 10.0      # strictly positive "seconds"
+    stats = LatencyStats()
+    for x in xs:
+        stats.add(x)
+    rep = stats.report()
+    assert rep["n"] == len(stats) == len(xs)
+    for q in QS:
+        tag = f"p{int(round(q * 100)):02d}"
+        assert rep[f"{tag}_ms"] == pytest.approx(
+            float(np.quantile(xs, q)) * 1e3)
+        # streaming tracks exact in rank space on the same data
+        assert abs(_rank(xs, rep[f"p2_{tag}_ms"] / 1e3) - q) <= 0.025
+
+
+# -- QoS ladder / controller edge cases ---------------------------------------
+
+def test_ladder_halves_to_floor_with_bits_rung():
+    spec = QoSSpec(k=32, d=64, bits=8, k_floor=4, bits_floor=4,
+                   high_depth=4, low_depth=1, deadline_s=0.1)
+    assert spec.ladder() == [(32, 8), (16, 8), (8, 8), (4, 8), (4, 4)]
+    # no quantization room -> no bits rung; k at floor -> single-k ladder
+    assert QoSSpec(k=8, d=64, k_floor=8).ladder() == [(8, 0)]
+    assert QoSSpec(k=8, d=64, bits=4, k_floor=4,
+                   bits_floor=4).ladder() == [(8, 4), (4, 4)]
+
+
+def test_ladder_floor_validation():
+    with pytest.raises(AssertionError):
+        QoSSpec(k=4, d=64, k_floor=8)           # floor above top
+    with pytest.raises(AssertionError):
+        QoSSpec(k=8, d=4)                       # k above cut width
+    with pytest.raises(AssertionError):
+        QoSSpec(k=8, d=64, bits=4, bits_floor=8)  # bits floor above top
+
+
+def test_compressor_spec_strings():
+    assert compressor_spec(8, 0) == "randtopk:k=8"
+    assert compressor_spec(8, 4) == "randtopk_quant:k=8,bits=4"
+
+
+def _qspec(**kw):
+    base = dict(k=16, d=64, k_floor=4, high_depth=4, low_depth=1,
+                deadline_s=0.1, patience=2, cooldown=0, sustain=1000)
+    base.update(kw)
+    return QoSSpec(**base)
+
+
+def test_controller_tighten_saturates_at_floor():
+    c = QoSController(_qspec())
+    for _ in range(10):                 # acute congestion every observation
+        c.observe(queue_depth=10, latency_s=0.01)
+    assert c.level == len(c.levels) - 1 == 2
+    assert c.k_bits() == (4, 0)         # clamped at k_floor, never below
+    assert c.switches == 2
+
+
+def test_controller_relax_saturates_at_declared_top():
+    c = QoSController(_qspec())
+    for _ in range(4):
+        c.observe(10, 0.01)             # drive to the floor
+    for _ in range(20):
+        c.observe(0, 0.0)               # calm: relax one rung per patience
+    assert c.level == 0 and c.k_bits() == (16, 0)
+    assert c.switches == 4              # 2 down + 2 back up, then stable
+
+
+def test_controller_relax_hysteresis_resets_on_pressure():
+    c = QoSController(_qspec(patience=3))
+    c.observe(10, 0.01)                 # one rung down
+    assert c.level == 1
+    # two healthy observations, then a mid-pressure one: the healthy
+    # streak must restart — one calm flush inside a burst cannot relax
+    c.observe(0, 0.0)
+    c.observe(0, 0.0)
+    c.observe(3, 0.01)                  # neither acute nor healthy
+    c.observe(0, 0.0)
+    c.observe(0, 0.0)
+    assert c.level == 1                 # streak broken: still tightened
+    c.observe(0, 0.0)
+    assert c.level == 0                 # third consecutive healthy relaxes
+
+
+def test_controller_cooldown_bounds_switch_rate():
+    c = QoSController(_qspec(cooldown=3))
+    for _ in range(6):
+        c.observe(10, 0.01)
+    # 6 acute observations but a move only every `cooldown` of them
+    assert c.switches == 2 and c.level == 2
+
+
+def test_controller_chronic_pressure_tightens_without_acute():
+    spec = _qspec(high_depth=50, sustain=3)     # acute thresholds out of reach
+    c = QoSController(spec)
+    for _ in range(10):
+        c.observe(3, 0.01)      # constant mid depth: EMA plateaus above low
+    assert c.level >= 1         # chronic detector tightened the rung
+
+
+def test_controller_state_roundtrip_through_store(tmp_path):
+    a = QoSController(_qspec())
+    for depth in (10, 10, 0, 10, 3):
+        a.observe(depth, 0.01)
+    store.save(str(tmp_path), 3, a.state())
+    b = QoSController(_qspec())
+    b.load_state(store.restore(str(tmp_path), 3, like=b.state()))
+    assert (b.level, b.healthy, b.cool, b.switches) == \
+        (a.level, a.healthy, a.cool, a.switches)
+    for depth in (10, 0, 0, 0, 10):     # identical futures stay identical
+        a.observe(depth, 0.01)
+        b.observe(depth, 0.01)
+        assert b.level == a.level and b.healthy == a.healthy
+
+
+def test_controller_load_clamps_level_to_ladder():
+    long = QoSController(_qspec(k=64))          # 5 rungs: 64..4
+    for _ in range(10):
+        long.observe(10, 0.01)
+    st = long.state()
+    short = QoSController(_qspec(k=8))          # 2 rungs: 8, 4
+    short.load_state(st)
+    assert short.level == len(short.levels) - 1
+
+
+def _sspec(**kw):
+    base = dict(k=16, d=64, warmup_steps=2, anneal_steps=4, k_min=4,
+                drop=0.5, patience=2, min_rel_improve=0.05, ema=0.5)
+    base.update(kw)
+    return ScheduleSpec(**base)
+
+
+def test_kscheduler_plateau_drop_inside_anneal_window():
+    sched = KScheduler(_sspec())
+    assert sched.k_bits(0) == (64, 0)           # dense warmup
+    pre = [sched.k_bits(s)[0] for s in range(2, 6)]
+    assert pre == sorted(pre, reverse=True) and pre[-1] == 16
+    # constant loss -> plateau fires after `patience`, halving cur_k while
+    # the anneal is conceptually still running
+    for _ in range(3):
+        sched.observe(1.0)
+    assert sched.cur_k == 8
+    post = [sched.k_bits(s)[0] for s in range(2, 6)]
+    # the anneal now targets the dropped cur_k and the `max(cur_k, k)`
+    # clamp keeps every stage at/above it, monotone to the new endpoint
+    assert post == sorted(post, reverse=True) and post[-1] == 8
+    assert all(k >= sched.cur_k for k in post)
+
+
+def test_kscheduler_freezes_at_floor():
+    sched = KScheduler(_sspec())
+    while sched.cur_k > sched.spec.k_min:
+        sched.observe(1.0)
+    assert sched.cur_k == 4
+    frozen = sched.state()["since"]
+    for _ in range(10):                 # at the floor: EMA tracks, no drops
+        sched.observe(1.0)
+    assert sched.cur_k == 4
+    assert sched.state()["since"] == frozen
+
+
+def test_kscheduler_state_roundtrip_through_store(tmp_path):
+    a = KScheduler(_sspec())
+    for loss in (1.0, 0.9, 0.9, 0.9):
+        a.observe(loss)
+    store.save(str(tmp_path), 7, {"sched": a.state()})
+    b = KScheduler(_sspec())
+    b.load_state(store.restore(str(tmp_path), 7,
+                               like={"sched": b.state()})["sched"])
+    assert b.cur_k == a.cur_k
+    assert b.ema_loss == pytest.approx(a.ema_loss)
+    for _ in range(6):                  # identical futures stay identical
+        a.observe(0.9)
+        b.observe(0.9)
+        assert b.cur_k == a.cur_k
+
+
+def test_ema_plateau_smooth_keeps_counters_frozen():
+    p = EmaPlateau(0.5, 0.05, 2)
+    assert not p.observe(1.0)
+    p.smooth(1.0)
+    p.smooth(1.0)
+    assert p.since == 0 and p.best == 1.0       # smooth() never advances
+    assert not p.observe(1.0) and p.observe(1.0)  # observe() still can
+
+
+# -- BatchingQueue admission / backpressure on a virtual clock ----------------
+
+def test_queue_full_raises_and_preserves_backlog():
+    vc = VirtualClock()
+    q = BatchingQueue(max_batch=4, max_wait=0.01, max_depth=8, clock=vc)
+    for i in range(8):
+        q.put(i)
+    with pytest.raises(QueueFull):
+        q.put(8)
+    assert len(q) == 8                  # the rejected put left no residue
+    assert q.get_batch(idle_timeout=0.0) == [0, 1, 2, 3]
+    q.put(8)                            # headroom is back after the flush
+
+
+def test_open_loop_overload_bounded_no_loss_no_dup():
+    """Open-loop producer at ~3x service capacity: depth stays bounded by
+    `max_depth`, rejected puts raise, and every accepted item is drained
+    exactly once in order — no loss, no duplication, no real waits."""
+    vc = VirtualClock()
+    q = BatchingQueue(max_batch=4, max_wait=0.01, max_depth=10, clock=vc)
+    rng = random.Random(0)
+    accepted, drained = [], []
+    rejected = 0
+    busy_until = 0.0                    # modeled service time serializes
+    max_depth_seen = 0
+
+    def drain_due(limit):
+        nonlocal busy_until
+        while True:
+            due = q.next_flush_at()
+            if due is None:
+                return
+            due = max(due, busy_until)
+            if due > limit:
+                return
+            vc.advance_to(due)
+            drained.extend(q.get_batch(idle_timeout=0.0))
+            busy_until = due + 0.05     # ~80 items/s vs ~300/s offered
+
+    t = 0.0
+    for i in range(400):
+        t += rng.expovariate(300.0)
+        drain_due(t)
+        vc.advance_to(t)
+        try:
+            q.put(i)
+            accepted.append(i)
+        except QueueFull:
+            rejected += 1
+        max_depth_seen = max(max_depth_seen, len(q))
+    drain_due(float("inf"))
+
+    assert rejected > 0                 # overload genuinely hit admission
+    assert max_depth_seen <= 10         # backlog bounded by max_depth
+    assert drained == accepted          # exact, ordered, no loss/no dup
+    assert vc.waits == 0                # event loop never had to wait
+
+
+def test_put_wake_policy_unchanged():
+    """PR-6 wake policy: only the deadline-starting (n==1) and the
+    fill-completing (n>=max_batch) puts notify the consumer."""
+    vc = VirtualClock()
+    q = BatchingQueue(max_batch=4, max_wait=0.01, clock=vc)
+    wakes = []
+    orig = q._cv.notify_all
+    q._cv.notify_all = lambda: (wakes.append(len(q._items)), orig())[-1]
+    for i in range(6):
+        q.put(i)
+    assert wakes == [1, 4, 5, 6]        # n==2, n==3 stayed silent
+    assert q.get_batch(idle_timeout=0.0) == [0, 1, 2, 3]
+    wakes.clear()
+    q.put(6)                            # backlog at 3: not a first item...
+    assert wakes == []
+    q.put(7)                            # ...but this fills the batch
+    assert wakes == [4]
+
+
+def test_next_flush_at_drives_waitless_flushes():
+    vc = VirtualClock(start=100.0)
+    q = BatchingQueue(max_batch=3, max_wait=0.02, clock=vc)
+    assert q.next_flush_at() is None
+    q.put("a")
+    assert q.next_flush_at() == pytest.approx(100.02)
+    vc.advance(0.005)
+    q.put("b")                          # deadline pinned to the FIRST item
+    assert q.next_flush_at() == pytest.approx(100.02)
+    q.put("c")                          # full: flush wants to run now
+    assert q.next_flush_at() == vc.monotonic()
+    assert q.get_batch(idle_timeout=0.0) == ["a", "b", "c"]
+    q.put("d")
+    vc.advance_to(q.next_flush_at())
+    assert q.get_batch(idle_timeout=0.0) == ["d"]   # ragged partial at due
+    assert q.get_batch(idle_timeout=0.0) == []      # idle tick, no wait
+    assert vc.waits == 0
+
+
+# -- full co-simulation: determinism, admission, the burst claim --------------
+
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = configs.get("qwen3-8b", smoke=True).with_(
+        split=SplitConfig(cut_layer=1, compressor="randtopk", k=16))
+    params = transformer.init_model(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _mini(seed, qos=None, **kw):
+    base = dict(
+        seed=seed, duration_s=2.5,
+        arrivals=ArrivalSpec(process="mmpp", rate=12.0, burst_rate=24.0,
+                             mean_calm_s=1.0, mean_burst_s=1.0),
+        fleet=FleetSpec(compressors=("randtopk:k=16",), prompt_len=(2, 3),
+                        gen=(3, 5), bandwidth_Bps=400_000.0),
+        service=ServiceModel(flush_overhead_s=1e-3, per_row_s=1e-4,
+                             per_byte_s=3e-5),
+        slo=SLOSpec(p99_ms=60.0, max_reject_frac=0.02),
+        qos=qos, capacity=16, max_batch=8, max_wait=0.004,
+        admission_depth=24)
+    base.update(kw)
+    return LoadGenConfig(**base)
+
+
+def _no_wall(report):
+    return {k: v for k, v in report.items() if k != "wall_s_real"}
+
+
+def test_arrivals_deterministic_and_mmpp_alternates():
+    spec = ArrivalSpec(process="mmpp", rate=5.0, burst_rate=50.0,
+                       mean_calm_s=0.5, mean_burst_s=0.5)
+    a, b = _Arrivals(spec, 42), _Arrivals(spec, 42)
+    ta = tb = 0.0
+    seq_a, seq_b = [], []
+    for _ in range(300):
+        ta, tb = a.next_after(ta), b.next_after(tb)
+        seq_a.append(ta)
+        seq_b.append(tb)
+    assert seq_a == seq_b               # bit-identical arrival trace
+    states = [s for _, s in a.state_path]
+    assert states[0] == "calm" and len(states) > 2
+    assert all(x != y for x, y in zip(states, states[1:]))
+
+
+def test_report_deterministic_same_seed(smoke):
+    cfg, params = smoke
+    r1 = run_loadgen(cfg, _mini(3), params=params)
+    r2 = run_loadgen(cfg, _mini(3), params=params)
+    assert _no_wall(r1) == _no_wall(r2)
+    assert r1["cv_waits"] == 0          # nothing ever really slept
+    assert r1["sessions"]["failed"] == 0
+    s = r1["sessions"]
+    assert s["arrived"] == s["admitted"] + s["rejected"]
+    r3 = run_loadgen(cfg, _mini(5), params=params)
+    assert r3["trace"]["arrivals"] != r1["trace"]["arrivals"]
+
+
+def test_report_deterministic_under_chaos(smoke):
+    cfg, params = smoke
+    plan = FaultPlan(seed=11, corrupt=0.06, drop=0.05, duplicate=0.05,
+                     reorder=0.03, rechunk=0.15, max_faults=30)
+    runs = []
+    for _ in range(2):                  # fresh injector per run, same plan
+        runs.append(run_loadgen(
+            cfg, _mini(7, retry_timeout=0.1), params=params,
+            wrap_endpoint=FaultInjector(plan)))
+    r1, r2 = runs
+    assert _no_wall(r1) == _no_wall(r2)     # chaos replays chunk-for-chunk
+    assert r1["sessions"]["failed"] == 0    # every session recovered
+    assert r1["sessions"]["completed"] > 0
+    assert r1["cv_waits"] == 0
+    fc = r1["fault_counters"]
+    assert (fc["server_faults_detected"] + fc["client_faults_detected"]
+            + fc["duplicates"] + fc["replays"]) > 0
+    assert r1["trace"]["k_bits"] == r2["trace"]["k_bits"]
+
+
+def test_admission_control_rejects_at_capacity(smoke):
+    cfg, params = smoke
+    r = run_loadgen(cfg, _mini(1, capacity=2, admission_depth=8),
+                    params=params)
+    s = r["sessions"]
+    assert s["rejected"] > 0
+    assert s["arrived"] == s["admitted"] + s["rejected"]
+    assert {reason for _, reason in r["trace"]["rejects"]} <= \
+        {"capacity", "queue"}
+    assert s["failed"] == 0             # rejection is clean, never an error
+
+
+def test_adaptive_fleet_beats_static_under_burst(smoke):
+    """Mini version of the bench gate (benchmarks/loadgen.py): same seed,
+    same MMPP burst — the QoS ladder must buy real p99 headroom by
+    shedding bytes, and its (k, bits) trajectory must be deterministic."""
+    cfg, params = smoke
+    arr = ArrivalSpec(process="mmpp", rate=22.0, burst_rate=44.0,
+                      mean_calm_s=2.0, mean_burst_s=3.0)
+    fleet = FleetSpec(compressors=("randtopk:k=16",), prompt_len=(2, 3),
+                      gen=(5, 8), bandwidth_Bps=400_000.0)
+    qos = QoSSpec(k=16, d=cfg.d_model, k_floor=4, high_depth=6, low_depth=2,
+                  deadline_s=0.04, patience=16, cooldown=1)
+    kw = dict(arrivals=arr, fleet=fleet, duration_s=6.0, capacity=32,
+              admission_depth=48)
+    static = run_loadgen(cfg, _mini(7, qos=None, **kw), params=params)
+    adaptive = run_loadgen(cfg, _mini(7, qos=qos, **kw), params=params)
+    assert static["sessions"]["failed"] == 0
+    assert adaptive["sessions"]["failed"] == 0
+    assert adaptive["qos"]["switches"] > 0          # the ladder engaged
+    assert len(adaptive["qos"]["level_hist"]) > 1   # below the top rung
+    assert (adaptive["latency_ms"]["p99_ms"]
+            < static["latency_ms"]["p99_ms"])
+    assert (adaptive["bytes_up_per_token"]
+            < static["bytes_up_per_token"])         # headroom came from bytes
+
+
+def test_evaluate_slo_optional_gates():
+    lat = {"n": 100, "p50_ms": 5.0, "p99_ms": 10.0}
+    slo = SLOSpec(p99_ms=20.0, p50_ms=4.0, max_reject_frac=0.1,
+                  max_queue_depth=3)
+    out = evaluate_slo(slo, lat, reject_frac=0.05, max_depth=4)
+    assert out["checks"] == {"p99": True, "rejects": True,
+                             "p50": False, "queue_depth": False}
+    assert not out["ok"]
+    # zero-traffic runs pass the latency gate vacuously
+    empty = {"n": 0, "p50_ms": float("nan"), "p99_ms": float("nan")}
+    assert evaluate_slo(SLOSpec(), empty, 0.0, 0)["ok"]
