@@ -80,7 +80,8 @@ def _strip(report: dict) -> dict:
     """BENCH-sized copy: drop the per-event traces (tests use those) and
     the one nondeterministic field."""
     out = {k: v for k, v in report.items()
-           if k not in ("trace", "wall_s_real")}
+           if k not in ("trace", "wall_s_real", "metrics",
+                        "metrics_timeline")}
     out["arrivals"] = {k: v for k, v in report["arrivals"].items()
                        if k != "state_path"}
     return out

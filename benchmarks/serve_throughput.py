@@ -30,7 +30,10 @@ Perf gate (run by `scripts/ci.sh --smoke`): the randtopk/identity
 tokens-per-second ratio at the largest client count served by both pure
 mixes must stay above `RATIO_FLOOR` — the compressed path must remain the
 fast path; the ratio, the floor, and each gate run's per-stage decode/step
-split are recorded in the JSON.
+split are recorded in the JSON. A second, observability gate runs the same
+engine with a live `obs.trace.Tracer` + metrics registry and requires the
+tracing-on/off throughput ratio to stay above `OBS_RATIO_FLOOR` (the `obs`
+section of BENCH_serve.json; scripts/trace_smoke.py re-checks it).
 
     PYTHONPATH=src python benchmarks/serve_throughput.py --smoke
 """
@@ -50,6 +53,7 @@ import repro.configs as configs
 from repro.core import compressors, wire
 from repro.models import transformer
 from repro.models.config import Runtime, SplitConfig
+from repro.obs.trace import Tracer
 from repro.roofline import analysis, hlo as hlo_mod
 from repro.runtime import engine, steps
 from repro.split import protocol
@@ -74,6 +78,13 @@ GATE_CLIENTS = 8
 #: short runs (gen<=32) spend a third of their wall in session ramp and
 #: under-report steady-state tokens/s by ~15% on a single-core box.
 GATE_GEN = 48
+
+#: observability overhead gate: the fully-instrumented hot path (live
+#: `obs.trace.Tracer` + per-run registry counters) must keep at least this
+#: fraction of un-traced throughput — the measured cost of the telemetry
+#: layer (docs/observability.md). Median of OBS_REPS interleaved run pairs.
+OBS_RATIO_FLOOR = 0.95
+OBS_REPS = 5
 
 #: the serving-kernel roofline audit covers one payload kind per wire
 #: format the compressors can emit
@@ -276,6 +287,34 @@ def main(emit=print, smoke: bool = False) -> bool:
              f"reply_us_tok={st['reply']}")
     emit(f"serve_check,perf_gate,randtopk_vs_identity_ratio,{ratio_ok}")
 
+    # observability overhead gate: identical randtopk runs with tracing off
+    # vs ON (live tracer + registry already wired by the engine), reps
+    # interleaved with gc fences exactly like the perf gate so allocator
+    # drift never lands on one mode
+    obs_samples = {"off": [], "on": []}
+    obs_events = 0
+    for _ in range(OBS_REPS):
+        for mode in ("off", "on"):
+            gc.collect()
+            tracer = Tracer() if mode == "on" else None
+            res = engine.run_streaming(
+                cfg, n_clients=GATE_CLIENTS, prompt_len=4, gen=GATE_GEN,
+                max_batch=8, max_wait=0.02,
+                compressor_mix=["randtopk:k=16"], params=params,
+                tracer=tracer)
+            obs_samples[mode].append(res["tokens_per_s"])
+            if tracer is not None:
+                obs_events = len(tracer)
+    obs_tps = {m: float(np.median(s)) for m, s in obs_samples.items()}
+    obs_ratio = obs_tps["on"] / obs_tps["off"]
+    obs_ok = obs_ratio >= OBS_RATIO_FLOOR
+    emit(f"serve,obs_gate,n_clients={GATE_CLIENTS},"
+         f"off_tok_per_s={obs_tps['off']:.1f},"
+         f"on_tok_per_s={obs_tps['on']:.1f},"
+         f"trace_events={obs_events},"
+         f"on_off_ratio={obs_ratio:.3f},floor={OBS_RATIO_FLOOR}")
+    emit(f"serve_check,obs_gate,tracing_overhead_ratio,{obs_ok}")
+
     roofline_rows = _roofline_rows(cfg, params, emit)
     roofline_ok = all(r["ok"] for r in roofline_rows)
     emit(f"roofline_check,all_programs,predicted_vs_measured,{roofline_ok}")
@@ -314,6 +353,7 @@ def main(emit=print, smoke: bool = False) -> bool:
     emit(f"serve_check,all_compressors,measured_within_5pct,{ok_all}")
     ok_all &= roofline_ok
     ok_all &= ratio_ok
+    ok_all &= obs_ok
     point = {"bench": "serve_throughput", "smoke": bool(smoke),
              "arch": cfg.name, "d_model": d,
              "uncompressed_B_per_token": dense_B,
@@ -323,6 +363,11 @@ def main(emit=print, smoke: bool = False) -> bool:
              "ratio_n_clients": GATE_CLIENTS, "ratio_floor": RATIO_FLOOR,
              "gate_reps": GATE_REPS,
              "gate_stage_us_per_token": gate_stage,
+             "obs": {"tokens_per_s_off": round(obs_tps["off"], 2),
+                     "tokens_per_s_on": round(obs_tps["on"], 2),
+                     "on_off_ratio": round(float(obs_ratio), 4),
+                     "ratio_floor": OBS_RATIO_FLOOR, "reps": OBS_REPS,
+                     "trace_events": obs_events, "ok": bool(obs_ok)},
              "roofline": roofline_rows,
              "rows": all_rows, "ok": bool(ok_all)}
     # benchmarks/loadgen.py owns the `loadgen` section of the same file;

@@ -34,6 +34,15 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/chaos_smoke.py
 # roofline rows.
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/serve_throughput.py --smoke
 
+# observability smoke: a short seeded chaos loadgen run with tracing ON,
+# twice, entirely in a tempdir (no artifacts on any path) — the exported
+# Chrome-trace JSON must be schema-valid, laminar per track, carry all
+# seven lifecycle spans plus the QoS/ARQ/admission instants, and be
+# byte-identical across the two same-seed runs; also re-checks the
+# tracing-overhead gate the bench above recorded in BENCH_serve.json's
+# `obs` section (on/off throughput ratio >= its pinned floor)
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/trace_smoke.py
+
 # production-traffic SLO gate: open-loop MMPP arrivals on a virtual clock
 # over the real frame/ARQ/arena path — under the seeded 2x overload burst
 # the QoS-adaptive (k, bits) fleet must hold the declared p99 token-latency

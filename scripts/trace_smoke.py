@@ -1,0 +1,118 @@
+"""Trace smoke — CI gate for the observability layer (docs/observability.md).
+
+Runs one short seeded open-loop loadgen scenario (virtual clock, chaos
+injected) twice with tracing ON, entirely inside a tempdir (no artifacts
+survive, pass or fail), and asserts the telemetry contract:
+
+  1. the exported file is schema-valid Chrome-trace-event JSON
+     (`obs.export.validate_chrome_trace`) whose spans form a laminar
+     family per track (`check_span_nesting`);
+  2. all seven frame-lifecycle spans (`obs.trace.LIFECYCLE_SPANS`) and the
+     QoS / ARQ / admission instants are present;
+  3. the two same-seed runs wrote byte-identical files — the determinism
+     the VirtualClock-driven tracer promises;
+  4. if BENCH_serve.json (written by `benchmarks/serve_throughput.py`,
+     which ci.sh runs first) carries an `obs` section, its tracing
+     overhead gate must have passed.
+
+    PYTHONPATH=src python scripts/trace_smoke.py
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import tempfile
+
+import jax
+
+import repro.configs as configs
+from repro.models import transformer
+from repro.models.config import SplitConfig
+from repro.obs.export import check_span_nesting, validate_chrome_trace
+from repro.obs.trace import (EVT_ADMISSION_REJECT, EVT_ARQ_RETRANSMIT,
+                             EVT_QOS_TRANSITION, LIFECYCLE_SPANS)
+from repro.runtime.loadgen import (ArrivalSpec, FleetSpec, LoadGenConfig,
+                                   ServiceModel, SLOSpec, run_loadgen)
+from repro.runtime.qos import QoSSpec
+from repro.testing import FaultInjector, FaultPlan
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+BENCH_PATH = ROOT / "BENCH_serve.json"
+
+#: every instant class the scenario below must surface: admission pressure
+#: (tight capacity under an MMPP burst), ARQ recovery (injected drops),
+#: and QoS rung moves (latency pushed past the controller's deadline)
+REQUIRED_INSTANTS = (EVT_ADMISSION_REJECT, EVT_ARQ_RETRANSMIT,
+                     EVT_QOS_TRANSITION)
+
+
+def _scenario() -> LoadGenConfig:
+    qos = QoSSpec(k=16, d=64, k_floor=4, high_depth=4, low_depth=1,
+                  deadline_s=0.02, patience=4, cooldown=1)
+    return LoadGenConfig(
+        seed=11, duration_s=2.5,
+        arrivals=ArrivalSpec(process="mmpp", rate=14.0, burst_rate=28.0,
+                             mean_calm_s=1.0, mean_burst_s=1.0),
+        fleet=FleetSpec(compressors=("randtopk:k=16",), prompt_len=(2, 3),
+                        gen=(3, 5), bandwidth_Bps=400_000.0),
+        service=ServiceModel(flush_overhead_s=2e-3, per_row_s=2e-4,
+                             per_byte_s=3e-5),
+        slo=SLOSpec(p99_ms=250.0, max_reject_frac=1.0),
+        qos=qos, capacity=4, max_batch=4, max_wait=0.004,
+        admission_depth=6, retry_timeout=0.05, max_retries=64)
+
+
+def main() -> int:
+    cfg = configs.get("qwen3-8b", smoke=True).with_(
+        split=SplitConfig(cut_layer=1, compressor="randtopk", k=16))
+    params = transformer.init_model(jax.random.key(0), cfg)
+    lg = _scenario()
+    plan = FaultPlan(seed=11, corrupt=0.04, drop=0.05, duplicate=0.04,
+                     reorder=0.03, max_faults=40)
+    problems = []
+
+    with tempfile.TemporaryDirectory() as tmp:
+        paths = [pathlib.Path(tmp) / f"run{i}.json" for i in (1, 2)]
+        for p in paths:
+            run_loadgen(cfg, lg, params=params,
+                        wrap_endpoint=FaultInjector(plan), trace_path=p)
+        blobs = [p.read_bytes() for p in paths]
+        if blobs[0] != blobs[1]:
+            problems.append("same-seed runs wrote different trace bytes")
+        obj = json.loads(blobs[0])
+        problems += validate_chrome_trace(obj)
+        problems += check_span_nesting(obj["traceEvents"])
+        names = {e["name"] for e in obj["traceEvents"]}
+        missing = [s for s in LIFECYCLE_SPANS if s not in names]
+        if missing:
+            problems.append(f"missing lifecycle spans: {missing}")
+        missing = [s for s in REQUIRED_INSTANTS if s not in names]
+        if missing:
+            problems.append(f"missing instant events: {missing}")
+        print(f"trace_smoke: {len(obj['traceEvents'])} events, "
+              f"{len(names)} distinct names, two runs byte-identical="
+              f"{blobs[0] == blobs[1]}")
+
+    if BENCH_PATH.exists():
+        try:
+            obs = json.loads(BENCH_PATH.read_text()).get("obs")
+        except ValueError:
+            obs = None
+        if obs is not None:
+            print(f"trace_smoke: bench overhead ratio "
+                  f"{obs['on_off_ratio']} (floor {obs['ratio_floor']})")
+            if not obs["ok"]:
+                problems.append(
+                    f"tracing overhead gate failed in BENCH_serve.json: "
+                    f"ratio {obs['on_off_ratio']} < {obs['ratio_floor']}")
+
+    for p in problems:
+        print(f"trace_smoke: FAIL: {p}", file=sys.stderr)
+    if not problems:
+        print("trace_smoke: OK")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -45,6 +45,7 @@ import numpy as np
 from repro.core import compressors as C, wire
 from repro.fedtrain.async_policy import AsyncPolicy
 from repro.fedtrain.schedule import KScheduler
+from repro.obs.trace import NULL_TRACER, SPAN_CLIENT_ENCODE, session_tid
 from repro.optim import adamw_init, adamw_update
 from repro.runtime.arq import ArqClientMixin
 from repro.runtime.session import SessionStats
@@ -63,8 +64,12 @@ class TrainingClient(ArqClientMixin):
                  barrier=None, ckpt_every: int = 0,
                  reply_timeout: float = 120.0,
                  retry_timeout: Optional[float] = None,
-                 max_retries: int = 16, reconnect=None):
+                 max_retries: int = 16, reconnect=None,
+                 tracer=NULL_TRACER, registry=None):
         self.id = cid
+        self.tracer = tracer
+        if registry is not None:        # else: the mixin's process default
+            self.registry = registry
         self.spec = spec
         self.x = np.asarray(x_shard, np.float32)
         self.batch_ids = batch_ids          # one index array per local step
@@ -102,6 +107,18 @@ class TrainingClient(ArqClientMixin):
         self._ef_resid = np.zeros((spec.cut_dim,), np.float32)
         self._encode_cache: dict = {}
         self._update = jax.jit(self._make_update())
+        # pre-bound hot-path instruments (one registry lookup per metric)
+        reg = self.registry
+        self._m_frames_up = reg.counter("frames_total", party="client",
+                                        direction="up")
+        self._m_payload_up = reg.counter("payload_bytes_total",
+                                         party="client", direction="up")
+        self._m_framing_up = reg.counter("framing_bytes_total",
+                                         party="client", direction="up")
+        self._m_frames_down = reg.counter("frames_total", party="client",
+                                          direction="down")
+        self._m_bytes_down = reg.counter("wire_bytes_total", party="client",
+                                         direction="down")
 
     # -- jitted halves -------------------------------------------------------
 
@@ -169,6 +186,8 @@ class TrainingClient(ArqClientMixin):
         # ARE the Table-2 bwd column
         self.stats.count_down_frame(reply.header_nbytes,
                                     reply.payload_nbytes)
+        self._m_frames_down.inc()
+        self._m_bytes_down.inc(reply.nbytes)
 
     def _sync_step(self, step: int, xb, sub) -> np.ndarray:
         spec = self.spec
@@ -179,15 +198,20 @@ class TrainingClient(ArqClientMixin):
             k, bits = spec.k, spec.quant_bits
         self.sync_count += 1
         comp = self._compressor(min(k, d), bits)
-        p, resid = self._encode_fn(comp)(self.bottom, xb, sub,
-                                         jnp.asarray(self._ef_resid))
-        p = jax.tree.map(np.asarray, p)
+        with self.tracer.span(SPAN_CLIENT_ENCODE, tid=session_tid(self.id),
+                              step=step):
+            p, resid = self._encode_fn(comp)(self.bottom, xb, sub,
+                                             jnp.asarray(self._ef_resid))
+            p = jax.tree.map(np.asarray, p)
         self._ef_resid = np.asarray(resid)
 
         fb = wire.encode_payload_frame(self.id, step, p)
         self.endpoint.send(fb)
         hb = wire.payload_frame_header_nbytes(p)
         self.stats.count_up(hb, len(fb) - hb)
+        self._m_frames_up.inc()
+        self._m_payload_up.inc(len(fb) - hb)
+        self._m_framing_up.inc(hb)
         # L1's training transport is dense; its fwd_bits models the
         # worst-case nnz encoding, so account what actually crossed
         fwd_bits = (d * C.FLOAT_BITS if isinstance(comp, C.L1Reg)

@@ -40,6 +40,8 @@ from repro.fedtrain.async_policy import AsyncPolicy
 from repro.fedtrain.client import TrainingClient
 from repro.fedtrain.schedule import KScheduler, ScheduleSpec
 from repro.fedtrain.server import TrainingServer
+from repro.obs.registry import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
 from repro.optim import adamw_init
 from repro.runtime import engine as runtime_engine
 from repro.runtime.session import SessionStats
@@ -69,7 +71,7 @@ def run_fedtrain(spec: tabular.SplitSpec, dataset, *, n_clients: int = 1,
                  stop_after_steps: Optional[int] = None,
                  reply_timeout: float = 120.0, wrap_endpoint=None,
                  retry_timeout: Optional[float] = None,
-                 max_retries: int = 16) -> dict:
+                 max_retries: int = 16, tracer=None) -> dict:
     """Train `spec` over the wire; returns losses, accuracy, measured and
     analytic byte accounting for both directions, aggregated
     `fault_counters`, and the final params.
@@ -77,12 +79,18 @@ def run_fedtrain(spec: tabular.SplitSpec, dataset, *, n_clients: int = 1,
     `wrap_endpoint(cid, endpoint) -> endpoint` intercepts every client-side
     connection (initial + reconnect) — the hook
     `repro.testing.faults.FaultInjector` uses to run training under seeded
-    chaos; `retry_timeout` enables stop-and-wait retransmission."""
+    chaos; `retry_timeout` enables stop-and-wait retransmission. `tracer`
+    (an `obs.trace.Tracer`, default off) records encode/queue-wait spans;
+    the result's `metrics` key is the run's private `MetricsRegistry`
+    snapshot (docs/observability.md)."""
     # -- parties -------------------------------------------------------------
+    tracer = tracer if tracer is not None else NULL_TRACER
+    registry = MetricsRegistry()        # per-run, isolated
     _, top = tabular.init_parties(jax.random.key(seed), spec)
     server = TrainingServer(spec, top, adamw_init(top),
                             max_batch=max_batch or max(1, n_clients),
-                            max_wait=max_wait)
+                            max_wait=max_wait,
+                            tracer=tracer, registry=registry)
     server.expected_sessions = n_clients
 
     shards_x = [dataset.x_train[c::n_clients] for c in range(n_clients)]
@@ -123,7 +131,8 @@ def run_fedtrain(spec: tabular.SplitSpec, dataset, *, n_clients: int = 1,
             policy=policy, ef=ef, barrier=barrier, ckpt_every=ckpt_every,
             reply_timeout=reply_timeout, retry_timeout=retry_timeout,
             max_retries=max_retries,
-            reconnect=lambda cid=cid: _connect(cid)))
+            reconnect=lambda cid=cid: _connect(cid),
+            tracer=tracer, registry=registry))
     if barrier is not None:
         clients_box.extend(clients)
 
@@ -198,6 +207,7 @@ def run_fedtrain(spec: tabular.SplitSpec, dataset, *, n_clients: int = 1,
         "analytic_bytes_up": sum(c.analytic_up for c in clients),
         "analytic_bytes_down": sum(c.analytic_down for c in clients),
         "fault_counters": runtime_engine.fault_summary(server, clients),
+        "metrics": registry.snapshot(),
         "final_k": [c.scheduler.cur_k if c.scheduler else spec.k
                     for c in clients],
         "steps": end_step,

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import wire
+from repro.obs.trace import NULL_TRACER, SPAN_QUEUE_WAIT, session_tid
 from repro.optim import adamw_update
 from repro.runtime.batching import BatchingQueue
 from repro.runtime.server import FrameServerBase
@@ -51,14 +52,16 @@ class TrainingServer(FrameServerBase):
     direction = "training"
 
     def __init__(self, spec: tabular.SplitSpec, top, opt, *,
-                 max_batch: int = 4, max_wait: float = 0.005):
+                 max_batch: int = 4, max_wait: float = 0.005,
+                 tracer=NULL_TRACER, registry=None):
         self.spec = spec
         self.top = top
         self.opt = opt
         self.batch_sizes: List[int] = []
         self.step_count = 0
         self.labels_for: Callable = None    # set by the engine
-        self._init_connections(BatchingQueue(max_batch, max_wait))
+        self._init_connections(BatchingQueue(max_batch, max_wait),
+                               tracer=tracer, registry=registry)
         self._step = jax.jit(self._make_step())
 
     def _new_session(self, sid: int, endpoint) -> Session:
@@ -93,6 +96,20 @@ class TrainingServer(FrameServerBase):
 
     def _process(self, items) -> None:
         kept = 0
+        # pop every enqueue stamp (leaks otherwise) into the queue-wait
+        # histogram/span — the training twin of StreamingServer._process
+        t_flush = self.queue.clock.monotonic()
+        trace = self.tracer.enabled
+        for sess, frame in items:
+            t_enq = self._enq_ts.pop((sess.id, frame.seq), None)
+            if t_enq is None:
+                continue
+            self._m_qwait.observe((t_flush - t_enq) * 1e3)
+            if trace:
+                self.tracer.complete(SPAN_QUEUE_WAIT, t_enq, t_flush,
+                                     tid=session_tid(sess.id), sid=sess.id,
+                                     seq=frame.seq)
+        self._m_depth.set(len(self.queue))
         for sess, frame in items:
             # stop-and-wait dedup: the client never has two frames in
             # flight, so any seq above the last processed one is fresh
@@ -102,12 +119,15 @@ class TrainingServer(FrameServerBase):
             # re-ack the latest from cache instead.
             if frame.seq <= sess.last_seq:
                 sess.stats.duplicates += 1
+                self._m_dups.inc()
                 if (frame.seq == sess.last_seq
                         and sess.last_reply is not None):
                     sess.endpoint.send(sess.last_reply)
                     sess.stats.count_down_frame(
                         sess.last_reply_header,
                         len(sess.last_reply) - sess.last_reply_header)
+                    self._m_frames_down.inc()
+                    self._m_bytes_down.inc(len(sess.last_reply))
                 continue
             kept += 1
             # device-side decode: the dense cut view never exists on host
@@ -123,9 +143,12 @@ class TrainingServer(FrameServerBase):
             sess.endpoint.send(gf)
             sess.stats.count_down_frame(sess.last_reply_header,
                                         len(gf) - sess.last_reply_header)
+            self._m_frames_down.inc()
+            self._m_bytes_down.inc(len(gf))
             self.step_count += 1
         if kept:
             self.batch_sizes.append(kept)
+            self._m_fill.observe(kept)
 
     # -- checkpoint state ----------------------------------------------------
 

@@ -28,6 +28,8 @@ import numpy as np
 
 import repro.configs as configs
 from repro.models.config import SplitConfig
+from repro.obs.export import write_trace
+from repro.obs.trace import Tracer
 from repro.runtime import engine
 from repro.runtime.loadgen import (ArrivalSpec, FleetSpec, LoadGenConfig,
                                    SLOSpec, run_loadgen)
@@ -56,7 +58,10 @@ def _run_loadgen(cfg, args) -> None:
         qos=qos, capacity=args.capacity,
         max_batch=args.max_batch or 8, max_wait=args.max_wait,
         admission_depth=args.admission_depth)
-    rep = run_loadgen(cfg, lg)
+    rep = run_loadgen(cfg, lg, trace_path=args.trace)
+    if args.trace:
+        print(f"trace: {rep['trace_events']} events -> {args.trace} "
+              f"(load in https://ui.perfetto.dev)")
     lat, s = rep["latency_ms"], rep["sessions"]
     print(f"loadgen: {s['arrived']} arrivals over "
           f"{rep['virtual_duration_s']:.1f}s virtual "
@@ -89,6 +94,10 @@ def main(argv=None):
                     help="server flush size (default min(8, clients))")
     ap.add_argument("--max-wait", type=float, default=0.01,
                     help="server batching window in seconds")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="record the frame lifecycle and write Chrome-trace"
+                         " JSON here (Perfetto-loadable, "
+                         "docs/observability.md)")
     lgrp = ap.add_argument_group("loadgen", "open-loop traffic + SLO mode")
     lgrp.add_argument("--loadgen", action="store_true",
                       help="run the open-loop load generator instead of "
@@ -124,9 +133,15 @@ def main(argv=None):
     if args.loadgen:
         return _run_loadgen(cfg, args)
 
+    tracer = Tracer() if args.trace else None
     res = engine.run_streaming(
         cfg, n_clients=args.clients, prompt_len=args.prompt_len,
-        gen=args.gen, max_batch=args.max_batch, max_wait=args.max_wait)
+        gen=args.gen, max_batch=args.max_batch, max_wait=args.max_wait,
+        tracer=tracer)
+    if tracer is not None:
+        n = write_trace(tracer, args.trace)
+        print(f"trace: {n} events -> {args.trace} "
+              f"(load in https://ui.perfetto.dev)")
 
     out = res["tokens"]
     fills = res["batch_sizes"]

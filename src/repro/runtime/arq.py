@@ -30,6 +30,9 @@ byte-identical to the pre-ARQ behavior.
 from __future__ import annotations
 
 from repro.core import wire
+from repro.obs.registry import DEFAULT_REGISTRY
+from repro.obs.trace import (EVT_ARQ_RECONNECT, EVT_ARQ_RETRANSMIT,
+                             NULL_TRACER, SPAN_ARQ_ACCEPT, session_tid)
 from repro.testing.clock import SYSTEM_CLOCK
 
 
@@ -41,10 +44,19 @@ class ArqClientMixin:
     transport (SYSTEM_CLOCK mode), while the event-driven loadgen harness
     replaces the wait with scheduled retry events on a `VirtualClock` and
     reuses `_accept_reply` / `_retransmit` / `_reconnect` unchanged.
+
+    Observability (docs/observability.md): retransmits and reconnects emit
+    `arq.*` instants on the session's trace track and bump the
+    `arq_replays_total` / `arq_reconnects_total` registry counters; an
+    accepted reply closes the lifecycle with a `client.arq_accept` span.
+    Both hooks are class-attribute defaults (`NULL_TRACER`, the process
+    registry) so subclasses and harnesses override per run.
     """
 
     _reply_kind: int                    # wire.FRAME_TOKENS / FRAME_GRAD
     clock = SYSTEM_CLOCK
+    tracer = NULL_TRACER
+    registry = DEFAULT_REGISTRY
 
     def _count_reply(self, reply: wire.Frame) -> None:
         raise NotImplementedError
@@ -62,25 +74,40 @@ class ArqClientMixin:
             pass
         self.endpoint = self.reconnect()
         self.stats.reconnects += 1
+        self.registry.counter("arq_reconnects_total", party="client").inc()
+        self.tracer.instant(EVT_ARQ_RECONNECT, tid=session_tid(self.id),
+                            sid=self.id)
 
     def _retransmit(self, frame_bytes: bytes, header_nbytes: int) -> None:
         self.stats.count_up(header_nbytes,
                             len(frame_bytes) - header_nbytes)
+        self.registry.counter("arq_replays_total", party="client").inc()
+        self.tracer.instant(EVT_ARQ_RETRANSMIT, tid=session_tid(self.id),
+                            sid=self.id, nbytes=len(frame_bytes))
         self.endpoint.send(frame_bytes)
 
-    def _accept_reply(self, reply: wire.Frame, step: int):
+    def _accept_reply(self, reply: wire.Frame, step: int, t_recv=None):
         """Classify one received reply for in-flight `step`: returns the
         frame when it acks `step`, None for a counted stale duplicate
         (seq < step — a server re-ack of a replayed frame), and raises
         `wire.WireError` on a protocol violation (wrong kind, wrong
         session, or a seq from the future the stop-and-wait discipline
-        can never produce)."""
+        can never produce). `t_recv` (clock seconds, optional) is when the
+        reply came off the wire — the start of the traced accept span."""
         if reply.kind == self._reply_kind and reply.session == self.id:
             self._count_reply(reply)
             if reply.seq == step:
+                if self.tracer.enabled:
+                    now = self.clock.monotonic()
+                    self.tracer.complete(
+                        SPAN_ARQ_ACCEPT, now if t_recv is None else t_recv,
+                        now, tid=session_tid(self.id), sid=self.id,
+                        step=step)
                 return reply
             if reply.seq < step:
                 self.stats.duplicates += 1      # stale re-ack, drop
+                self.registry.counter("duplicates_total",
+                                      party="client").inc()
                 return None
         raise wire.WireError(
             f"session {self.id}: unexpected reply kind={reply.kind} "
@@ -100,8 +127,12 @@ class ArqClientMixin:
                 # corrupt downstream: this connection's frame boundaries
                 # are gone — resume the session over a fresh one
                 self.stats.faults_detected += 1
+                self.registry.counter("faults_detected_total",
+                                      party="client").inc()
                 self._reconnect()
                 reply = None
+            t_recv = (self.clock.monotonic()
+                      if self.tracer.enabled and reply is not None else None)
             if reply is None or reply.kind == wire.FRAME_ERROR:
                 if self.retry_timeout is None or retries >= self.max_retries:
                     raise TimeoutError(
@@ -117,6 +148,6 @@ class ArqClientMixin:
                     self._reconnect()   # escape a stalled reader
                 self._retransmit(frame_bytes, header_nbytes)
                 continue
-            got = self._accept_reply(reply, step)
+            got = self._accept_reply(reply, step, t_recv)
             if got is not None:
                 return got

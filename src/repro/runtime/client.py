@@ -23,6 +23,8 @@ import jax
 import numpy as np
 
 from repro.core import wire
+from repro.obs.trace import (NULL_TRACER, SPAN_CLIENT_ENCODE, SPAN_WIRE_SEND,
+                             session_tid)
 from repro.runtime.arq import ArqClientMixin
 from repro.runtime.session import SessionStats
 from repro.testing.clock import Clock, SYSTEM_CLOCK
@@ -39,9 +41,13 @@ class StreamingClient(ArqClientMixin):
                  retry_timeout: Optional[float] = None,
                  max_retries: int = 16,
                  reconnect: Optional[Callable] = None,
-                 clock: Clock = SYSTEM_CLOCK):
+                 clock: Clock = SYSTEM_CLOCK,
+                 tracer=NULL_TRACER, registry=None):
         self.id = session_id
         self.clock = clock
+        self.tracer = tracer
+        if registry is not None:        # else: the mixin's process default
+            self.registry = registry
         self.params = params
         self.cache = cache
         self.bottom_step = bottom_step          # jitted shared per compressor
@@ -56,9 +62,26 @@ class StreamingClient(ArqClientMixin):
         self.generated: list = []
         self.latencies: list = []       # per-step send->reply seconds
         self.error: Optional[BaseException] = None
+        # pre-bound hot-path instruments (one registry lookup per metric,
+        # not per token)
+        reg = self.registry
+        self._m_frames_up = reg.counter("frames_total", party="client",
+                                        direction="up")
+        self._m_payload_up = reg.counter("payload_bytes_total",
+                                         party="client", direction="up")
+        self._m_framing_up = reg.counter("framing_bytes_total",
+                                         party="client", direction="up")
+        self._m_tokens = reg.counter("tokens_total", party="client")
+        self._m_latency = reg.histogram("token_latency_ms")
+        self._m_frames_down = reg.counter("frames_total", party="client",
+                                          direction="down")
+        self._m_bytes_down = reg.counter("wire_bytes_total", party="client",
+                                         direction="down")
 
     def _count_reply(self, reply: wire.Frame) -> None:
         self.stats.count_down(reply.nbytes)
+        self._m_frames_down.inc()
+        self._m_bytes_down.inc(reply.nbytes)
 
     def run(self) -> None:
         """Thread target; on any failure records the exception and closes."""
@@ -72,23 +95,38 @@ class StreamingClient(ArqClientMixin):
     def _run(self) -> None:
         token = np.asarray([[self.prompt[0]]], np.int32)
         n_steps = len(self.prompt) + self.gen - 1
+        tid = session_tid(self.id)
+        trace = self.tracer.enabled
+        if trace:
+            self.tracer.name_track(tid, f"session {self.id}")
         for step in range(n_steps):
-            payload, self.cache = self.bottom_step(self.params, self.cache,
-                                                   token)
-            payload = jax.tree.map(np.asarray, payload)  # device -> host
+            with self.tracer.span(SPAN_CLIENT_ENCODE, tid=tid, step=step):
+                payload, self.cache = self.bottom_step(self.params,
+                                                       self.cache, token)
+                payload = jax.tree.map(np.asarray, payload)  # device -> host
             frame_bytes = wire.encode_payload_frame(self.id, step, payload)
             t_send = self.clock.monotonic()
             self.endpoint.send(frame_bytes)
+            if trace:
+                self.tracer.complete(SPAN_WIRE_SEND, t_send,
+                                     self.clock.monotonic(), tid=tid,
+                                     step=step, nbytes=len(frame_bytes))
             hb = wire.payload_frame_header_nbytes(payload)
             self.stats.count_up(header_nbytes=hb,
                                 payload_nbytes=len(frame_bytes) - hb)
+            self._m_frames_up.inc()
+            self._m_payload_up.inc(len(frame_bytes) - hb)
+            self._m_framing_up.inc(hb)
 
             reply = self._await_reply(step, frame_bytes, hb)
-            self.latencies.append(self.clock.monotonic() - t_send)
+            latency = self.clock.monotonic() - t_send
+            self.latencies.append(latency)
+            self._m_latency.observe(latency * 1e3)
             nxt = int(reply.tokens[0])
             if step + 1 < len(self.prompt):
                 token = np.asarray([[self.prompt[step + 1]]], np.int32)
             else:
                 self.generated.append(nxt)
                 self.stats.tokens_out += 1
+                self._m_tokens.inc()
                 token = np.asarray([[nxt]], np.int32)

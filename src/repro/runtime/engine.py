@@ -21,6 +21,8 @@ import numpy as np
 from repro.core import compressors
 from repro.models import transformer
 from repro.models.config import ArchConfig, Runtime
+from repro.obs.registry import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
 from repro.runtime import steps
 from repro.runtime.client import StreamingClient
 from repro.runtime.server import StreamingServer, jit_serving_steps
@@ -63,19 +65,24 @@ def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
                   max_wait: float = 0.01, compressor_mix=None, seed: int = 0,
                   params=None, wrap_endpoint=None,
                   retry_timeout: Optional[float] = None,
-                  max_retries: int = 16) -> dict:
+                  max_retries: int = 16, tracer=None) -> dict:
     """Serve `n_clients` concurrent sessions of `prompt_len + gen` tokens.
 
     Returns a dict with the generated tokens `(n_clients, gen)`, per-session
     client/server stats dicts, the per-client compressor names, the server's
-    batch-fill history, wall-clock throughput, and the aggregated
-    `fault_counters` (all zero on a clean wire).
+    batch-fill history, wall-clock throughput, the aggregated
+    `fault_counters` (all zero on a clean wire), and a `metrics` snapshot
+    of the run's private `MetricsRegistry` (docs/observability.md).
 
     `wrap_endpoint(cid, endpoint) -> endpoint` intercepts every client-side
     connection — initial and reconnect — which is how
     `repro.testing.faults.FaultInjector` runs the whole stack under seeded
     chaos. `retry_timeout` enables stop-and-wait retransmission (needed for
     drop faults); None keeps the clean-wire single-wait behavior.
+
+    `tracer` (an `obs.trace.Tracer`, default off) records the frame
+    lifecycle of every session; `launch/serve.py --trace` exports it as
+    Perfetto-loadable Chrome-trace JSON.
     """
     rt = Runtime(mesh=None, training=False)
     # the label owner may serve from a quantized KV arena (int8 codes +
@@ -101,13 +108,16 @@ def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
     # every session owns a device-resident arena slot for its whole life,
     # so capacity = the expected concurrent session count; the jitted step
     # pair is shared across runs (see _serving_steps)
+    tracer = tracer if tracer is not None else NULL_TRACER
+    registry = MetricsRegistry()        # per-run, isolated
     server = StreamingServer(params, None, make_top_cache,
                              max_batch=max_batch,
                              max_wait=max_wait, dtype=cfg.adtype(),
                              capacity=n_clients,
                              x_shape=(1, 1, cfg.d_model),
                              jit_steps=_serving_steps(
-                                 cfg, rt_top, cut, cfg.dtype, None))
+                                 cfg, rt_top, cut, cfg.dtype, None),
+                             tracer=tracer, registry=registry)
     server.expected_sessions = n_clients
 
     prompts = np.asarray(jax.random.randint(
@@ -128,7 +138,8 @@ def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
             cid, params, make_cache(), bottom_steps[comps[cid]],
             _connect(cid), prompts[cid], gen,
             retry_timeout=retry_timeout, max_retries=max_retries,
-            reconnect=lambda cid=cid: _connect(cid)))
+            reconnect=lambda cid=cid: _connect(cid),
+            tracer=tracer, registry=registry))
 
     # warm every hot-loop jit BEFORE spawning threads (one compile, not a
     # storm — and the serving clock never pays compile time): bottom steps,
@@ -169,6 +180,7 @@ def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
         "compressor_objs": comps,
         "batch_sizes": server.batch_sizes,
         "fault_counters": fault_summary(server, clients),
+        "metrics": registry.snapshot(),
         # serve-loop wall seconds by stage (host staging [+ mixed-meta
         # decode dispatch] / fused-or-plain step incl. token readback /
         # reply framing+send), the token count those flushes served (for

@@ -55,6 +55,11 @@ import numpy as np
 from repro.core import compressors, wire
 from repro.models import transformer
 from repro.models.config import ArchConfig, Runtime
+from repro.obs.export import write_trace
+from repro.obs.registry import MetricsRegistry
+from repro.obs.trace import (EVT_ADMISSION_REJECT, NULL_TRACER, SERVE_TID,
+                             SPAN_CLIENT_ENCODE, SPAN_WIRE_SEND, Tracer,
+                             session_tid)
 from repro.runtime import engine as _engine
 from repro.runtime import steps
 from repro.runtime.arq import ArqClientMixin
@@ -67,6 +72,11 @@ from repro.runtime.transport import channel_pair
 from repro.testing.clock import VirtualClock
 
 _EPS = 1e-9
+
+# trace track for the modeled service time (`ServiceModel.flush_s`): its
+# spans cover [flush, server_free_at] and may abut the next flush exactly,
+# so they get their own track rather than riding the serve loop's
+_SERVICE_TID = 2_000_000
 
 
 # -- config surface ----------------------------------------------------------
@@ -151,6 +161,12 @@ class LoadGenConfig:
     retry_timeout: Optional[float] = 0.5
     max_retries: int = 64
     max_sessions: int = 0               # hard cap on arrivals (0 = none)
+    max_exact_latency_samples: int = 0  # >0: `LatencyStats` drops its
+    #   exact-sample list once this many samples arrive and reports the
+    #   streaming P² estimates only (runtime/metrics.py) — the opt-in for
+    #   long runs where keeping every sample is unaffordable
+    snapshot_every_s: float = 0.0       # >0: periodic registry snapshots
+    #   every N virtual seconds, reported as `metrics_timeline`
 
 
 # -- arrival process ---------------------------------------------------------
@@ -248,8 +264,23 @@ class _LoadSession(ArqClientMixin):
         self.t_arrive = clock.monotonic()
         self.t_done = float("nan")
 
+    # bound by the harness at admit (`bind_instruments`); None before that
+    _m_frames_down = None
+    _m_bytes_down = None
+
+    def bind_instruments(self, registry) -> None:
+        self._m_frames_down = registry.counter("frames_total",
+                                               party="client",
+                                               direction="down")
+        self._m_bytes_down = registry.counter("wire_bytes_total",
+                                              party="client",
+                                              direction="down")
+
     def _count_reply(self, reply: wire.Frame) -> None:
         self.stats.count_down(reply.nbytes)
+        if self._m_frames_down is not None:
+            self._m_frames_down.inc()
+            self._m_bytes_down.inc(reply.nbytes)
 
     def spec(self) -> str:
         return (self.qos.compressor_spec() if self.qos is not None
@@ -280,13 +311,19 @@ class _Harness:
     """Single-threaded virtual-time co-simulation of one traffic scenario."""
 
     def __init__(self, cfg: ArchConfig, lg: LoadGenConfig, params,
-                 wrap_endpoint=None):
+                 wrap_endpoint=None, trace: bool = False):
         self.cfg = cfg
         self.lg = lg
         self.wrap_endpoint = wrap_endpoint
         self.clock = VirtualClock()
         self.heap: List[Tuple[float, int, Callable]] = []
         self._seq = 0                   # heap tie-break: push order
+        # per-run observability: a private registry (so two scenarios never
+        # share counters) and, when tracing, a tracer on the VIRTUAL clock —
+        # every stamp is simulated time, so the exported Chrome-trace JSON
+        # is a deterministic function of the seed
+        self.registry = MetricsRegistry()
+        self.tracer = Tracer(clock=self.clock) if trace else NULL_TRACER
 
         rt = Runtime(mesh=None, training=False)
         rt_top = Runtime(mesh=None, training=False,
@@ -306,7 +343,8 @@ class _Harness:
             max_wait=lg.max_wait, dtype=cfg.adtype(), capacity=lg.capacity,
             x_shape=(1, 1, cfg.d_model), clock=self.clock,
             jit_steps=_engine._serving_steps(cfg, rt_top, cut, cfg.dtype,
-                                             None))
+                                             None),
+            tracer=self.tracer, registry=self.registry)
         self._bottom_cache: Dict[str, Tuple] = {}   # spec -> (comp, jit fn)
 
         # independent seeded streams so adding draws to one cannot shift
@@ -321,13 +359,28 @@ class _Harness:
         self._next_sid = 0
 
         # metrics
-        self.latency = LatencyStats()
+        self.latency = LatencyStats(
+            max_exact_samples=lg.max_exact_latency_samples or None)
         self.arrive_trace: List[float] = []
         self.rejects: List[Tuple[float, str]] = []
         self.depth_at_flush: List[int] = []
         self.completed = 0
         self.failed: List[int] = []
         self.t_end = 0.0
+        self.metrics_timeline: List[dict] = []
+        # pre-bound client-side instruments (the server pre-binds its own)
+        reg = self.registry
+        self._m_cl_frames_up = reg.counter("frames_total", party="client",
+                                           direction="up")
+        self._m_cl_payload_up = reg.counter("payload_bytes_total",
+                                            party="client", direction="up")
+        self._m_cl_framing_up = reg.counter("framing_bytes_total",
+                                            party="client", direction="up")
+        self._m_cl_tokens = reg.counter("tokens_total", party="client")
+        self._m_cl_latency = reg.histogram("token_latency_ms")
+        self._m_reject = {
+            reason: reg.counter("admission_rejects_total", reason=reason)
+            for reason in ("capacity", "queue")}
 
     # -- event loop machinery ------------------------------------------------
 
@@ -338,6 +391,13 @@ class _Harness:
     def run(self) -> dict:
         self._warm()
         t0 = time.perf_counter()
+        if self.lg.snapshot_every_s > 0:
+            # bounded, pre-scheduled registry snapshots over the arrival
+            # window (the end-of-run snapshot in the report covers drain)
+            t = self.lg.snapshot_every_s
+            while t <= self.lg.duration_s + _EPS:
+                self._push(t, self._snapshot_event)
+                t += self.lg.snapshot_every_s
         first = self.arrivals.next_after(0.0)
         if first <= self.lg.duration_s:
             self._push(first, self._arrival_event)
@@ -347,6 +407,11 @@ class _Harness:
             self.t_end = max(self.t_end, self.clock.monotonic())
             fn()
         return self._report(time.perf_counter() - t0)
+
+    def _snapshot_event(self) -> None:
+        self.metrics_timeline.append(
+            {"t": round(self.clock.monotonic(), 9),
+             "metrics": self.registry.snapshot()})
 
     def _warm(self) -> None:
         """Compile every bottom/decode/step program the scenario can reach
@@ -390,12 +455,19 @@ class _Harness:
         # backlog — an open-loop overload otherwise grows the queue (and
         # every session's latency) without limit
         if self.slots_in_use >= lg.capacity:
-            self.rejects.append((round(now, 9), "capacity"))
+            self._reject(now, "capacity")
             return
         if len(self.server.queue) >= lg.admission_depth:
-            self.rejects.append((round(now, 9), "queue"))
+            self._reject(now, "queue")
             return
         self._admit(now)
+
+    def _reject(self, now: float, reason: str) -> None:
+        self.rejects.append((round(now, 9), reason))
+        self._m_reject[reason].inc()
+        self.tracer.instant(EVT_ADMISSION_REJECT, tid=SERVE_TID,
+                            reason=reason, slots=self.slots_in_use,
+                            depth=len(self.server.queue))
 
     def _admit(self, now: float) -> None:
         lg, rng = self.lg, self._fleet_rng
@@ -407,12 +479,19 @@ class _Harness:
         plen = rng.randint(*fleet.prompt_len)
         gen = rng.randint(*fleet.gen)
         prompt = [rng.randrange(self.cfg.vocab) for _ in range(plen)]
-        qos = QoSController(lg.qos) if lg.qos is not None else None
+        qos = (QoSController(lg.qos, tracer=self.tracer,
+                             registry=self.registry, sid=sid)
+               if lg.qos is not None else None)
         ls = _LoadSession(
             sid, self._make_cache(), np.asarray(prompt, np.int32), gen,
             spec, qos, random.Random(lg.seed * 7919 + 100 + sid),
             fleet.think_s, fleet.bandwidth_Bps,
             reconnect=lambda ls_sid=sid: self._connect(ls_sid), clock=self.clock)
+        # route the session's ARQ mixin events (replays, reconnects,
+        # duplicates, accept spans) into this run's tracer + registry
+        ls.tracer = self.tracer
+        ls.registry = self.registry
+        ls.bind_instruments(self.registry)
         self.sessions[sid] = ls
         self.slots_in_use += 1
         ls.endpoint = self._connect(sid)
@@ -445,17 +524,30 @@ class _Harness:
         k, bits = getattr(comp, "k", self.cfg.d_model), getattr(comp, "bits",
                                                                 0)
         ls.kb_trace.append((int(k), int(bits)))
-        payload, ls.cache = bottom(self.params, ls.cache, ls.next_token())
-        payload = jax.tree.map(np.asarray, payload)
+        with self.tracer.span(SPAN_CLIENT_ENCODE, tid=session_tid(ls.id),
+                              step=ls.step):
+            # instantaneous in virtual time (compute is pre-warmed and
+            # virtual-free): the span records ordering, not duration
+            payload, ls.cache = bottom(self.params, ls.cache,
+                                       ls.next_token())
+            payload = jax.tree.map(np.asarray, payload)
         frame_bytes = wire.encode_payload_frame(ls.id, ls.step, payload)
         hb = wire.payload_frame_header_nbytes(payload)
         ls.stats.count_up(header_nbytes=hb,
                           payload_nbytes=len(frame_bytes) - hb)
+        self._m_cl_frames_up.inc()
+        self._m_cl_payload_up.inc(len(frame_bytes) - hb)
+        self._m_cl_framing_up.inc(hb)
         ls.endpoint.send(frame_bytes)
         ls.inflight = _InFlight(ls.step, frame_bytes, hb, t_send=now)
         conn = ls.conn
-        self._push(now + ls.tx_s(len(frame_bytes)),
-                   lambda: self._rx_event(ls, conn))
+        tx = ls.tx_s(len(frame_bytes))
+        if self.tracer.enabled:
+            # the modeled uplink occupancy under the client's bandwidth cap
+            self.tracer.complete(SPAN_WIRE_SEND, now, now + tx,
+                                 tid=session_tid(ls.id), step=ls.step,
+                                 nbytes=len(frame_bytes))
+        self._push(now + tx, lambda: self._rx_event(ls, conn))
         self._arm_retry(ls)
 
     def _arm_retry(self, ls: _LoadSession) -> None:
@@ -554,11 +646,13 @@ class _Harness:
         now = self.clock.monotonic()
         ls.latencies.append(now - ls.inflight.t_send)
         self.latency.add(ls.latencies[-1])
+        self._m_cl_latency.observe(ls.latencies[-1] * 1e3)
         ls.inflight = None
         nxt = int(reply.tokens[0])
         if ls.step + 1 >= len(ls.prompt):
             ls.generated.append(nxt)
             ls.stats.tokens_out += 1
+            self._m_cl_tokens.inc()
         ls.step += 1
         if ls.step < ls.n_steps:
             self._push(now + ls.think(), lambda: self._send_event(ls))
@@ -649,6 +743,13 @@ class _Harness:
         self.server._process(batch)
         self.server_free_at = now + self.lg.service.flush_s(
             len(batch), wire_bytes)
+        if self.tracer.enabled:
+            # the ServiceModel's virtual occupancy of the server — the
+            # span whose back-to-back packing is visible congestion
+            self.tracer.name_track(_SERVICE_TID, "service model")
+            self.tracer.complete("service.flush", now, self.server_free_at,
+                                 cat="service", tid=_SERVICE_TID,
+                                 rows=len(batch), wire_bytes=wire_bytes)
         for sess, frame in batch:
             ls = self.sessions.get(sess.id)
             if ls is None or ls.finished:
@@ -697,7 +798,8 @@ class _Harness:
             "reject_frac": round(reject_frac, 6),
             "tokens_out": tokens_out,
             "goodput_tok_per_s": round(tokens_out / makespan, 4),
-            "latency_ms": {k: round(v, 4) for k, v in lat.items()},
+            "latency_ms": {k: (v if isinstance(v, bool) else round(v, 4))
+                           for k, v in lat.items()},
             "queue_depth": {"max": int(depth.max()),
                             "mean": round(float(depth.mean()), 4)},
             "flushes": len(self.server.batch_sizes),
@@ -715,6 +817,9 @@ class _Harness:
                     "switches": switches},
             "fault_counters": _engine.fault_summary(
                 self.server, list(self.sessions.values())),
+            "metrics": self.registry.snapshot(),
+            "metrics_timeline": self.metrics_timeline,
+            "trace_events": len(self.tracer) if self.tracer.enabled else 0,
             "slo": slo,
             "cv_waits": self.clock.waits,   # 0 == no real sleeps ever
             "trace": {
@@ -742,12 +847,19 @@ def evaluate_slo(slo: SLOSpec, latency_ms: dict, reject_frac: float,
 
 
 def run_loadgen(cfg: ArchConfig, lg: LoadGenConfig, *, params=None,
-                wrap_endpoint=None) -> dict:
+                wrap_endpoint=None, trace_path=None) -> dict:
     """Run one traffic scenario; returns the deterministic SLO report
     (`wall_s_real` is the only nondeterministic field). `wrap_endpoint` is
-    the same fault-injection hook `engine.run_streaming` takes."""
-    harness = _Harness(cfg, lg, params, wrap_endpoint)
+    the same fault-injection hook `engine.run_streaming` takes.
+
+    `trace_path` (optional) enables lifecycle tracing on the virtual clock
+    and writes the run's Chrome-trace JSON there — byte-identical across
+    same-seed runs (docs/observability.md)."""
+    harness = _Harness(cfg, lg, params, wrap_endpoint,
+                       trace=trace_path is not None)
     report = harness.run()
     errs = [(sid, harness.sessions[sid].failed) for sid in harness.failed]
     report["failures"] = [[sid, str(e)] for sid, e in errs]
+    if trace_path is not None:
+        write_trace(harness.tracer, trace_path)
     return report

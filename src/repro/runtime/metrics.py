@@ -8,13 +8,18 @@ as each observation arrives — O(1) memory and time per sample, no buckets
 to pre-size. `LatencyStats` runs both the exact (sorted-at-the-end) and the
 streaming estimators side by side, so the harness reports exact percentiles
 while the bench proves the streaming estimate tracks them within tolerance
-(`tests/test_loadgen.py` pins the parity on adversarial distributions —
-the production report can then drop the exact list when sample counts make
-it unaffordable).
+(`tests/test_loadgen.py` pins the parity on adversarial distributions).
+When sample counts make the exact list unaffordable, construct with
+`keep_samples=False` (streaming-only from the start) or set
+`max_exact_samples=N` to demote automatically once N samples have been
+seen — the loadgen harness opts into the latter above its configured
+threshold. In streaming-only mode `report()` fills the `pXX_ms` keys from
+the P² markers, so consumers (`evaluate_slo`, the bench emitters) read the
+same schema either way.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -91,24 +96,56 @@ class P2Quantile:
 
 
 class LatencyStats:
-    """Exact + streaming latency percentiles over one traffic run."""
+    """Exact + streaming latency percentiles over one traffic run.
+
+    `keep_samples=False` drops the unbounded exact-sample list up front;
+    `max_exact_samples=N` keeps exact reporting until N samples have
+    arrived, then discards the list and continues streaming-only. Count,
+    mean, and max stay exact in every mode (O(1) accumulators).
+    """
 
     QS = (0.50, 0.95, 0.99)
 
-    def __init__(self):
+    def __init__(self, keep_samples: bool = True,
+                 max_exact_samples: Optional[int] = None):
         self.samples: List[float] = []
+        self.keep_samples = bool(keep_samples)
+        self.max_exact_samples = max_exact_samples
+        self._n = 0
+        self._sum = 0.0
+        self._max = float("-inf")
         self._p2: Dict[float, P2Quantile] = {q: P2Quantile(q)
                                              for q in self.QS}
 
     def add(self, seconds: float) -> None:
-        self.samples.append(float(seconds))
+        seconds = float(seconds)
+        self._n += 1
+        self._sum += seconds
+        if seconds > self._max:
+            self._max = seconds
+        if self.keep_samples:
+            self.samples.append(seconds)
+            if (self.max_exact_samples is not None
+                    and self._n >= self.max_exact_samples):
+                # past the affordability threshold: go streaming-only
+                self.keep_samples = False
+                self.samples = []
         for est in self._p2.values():
             est.add(seconds)
 
     def __len__(self) -> int:
-        return len(self.samples)
+        return self._n
+
+    @property
+    def streaming_only(self) -> bool:
+        """True once the exact-sample list has been dropped."""
+        return not self.keep_samples
 
     def exact(self, q: float) -> float:
+        """Exact quantile; falls back to the P² estimate once the sample
+        list has been dropped (streaming-only mode)."""
+        if self.streaming_only:
+            return self.streaming(q)
         if not self.samples:
             return float("nan")
         return float(np.quantile(np.asarray(self.samples), q))
@@ -117,13 +154,13 @@ class LatencyStats:
         return self._p2[q].value()
 
     def report(self) -> dict:
-        """Percentiles in milliseconds: exact (`pXX_ms`) next to the P²
-        streaming estimates (`p2_pXX_ms`)."""
-        out = {"n": len(self.samples),
-               "mean_ms": (float(np.mean(self.samples)) * 1e3
-                           if self.samples else float("nan")),
-               "max_ms": (float(np.max(self.samples)) * 1e3
-                          if self.samples else float("nan"))}
+        """Percentiles in milliseconds: `pXX_ms` (exact, or the P² value
+        in streaming-only mode) next to the always-streaming `p2_pXX_ms`."""
+        out = {"n": self._n,
+               "mean_ms": (self._sum / self._n * 1e3
+                           if self._n else float("nan")),
+               "max_ms": self._max * 1e3 if self._n else float("nan"),
+               "streaming_only": self.streaming_only}
         for q in self.QS:
             tag = f"p{int(round(q * 100)):02d}"
             out[f"{tag}_ms"] = self.exact(q) * 1e3
@@ -132,9 +169,16 @@ class LatencyStats:
 
 
 def merged_percentiles(groups: Sequence[Sequence[float]]) -> dict:
-    """Exact pooled percentiles across per-session latency lists (ms)."""
+    """Exact pooled percentiles across per-session latency lists.
+
+    Both branches return the same `pXX_ms`-style keys as
+    `LatencyStats.report()`; an all-empty input yields NaN values, not a
+    differently-keyed dict.
+    """
+    tags = {q: f"p{int(round(q * 100)):02d}_ms" for q in LatencyStats.QS}
     pooled = np.concatenate([np.asarray(g, float) for g in groups if len(g)]
                             or [np.asarray([], float)])
     if pooled.size == 0:
-        return {q: float("nan") for q in LatencyStats.QS}
-    return {q: float(np.quantile(pooled, q)) * 1e3 for q in LatencyStats.QS}
+        return {tags[q]: float("nan") for q in LatencyStats.QS}
+    return {tags[q]: float(np.quantile(pooled, q)) * 1e3
+            for q in LatencyStats.QS}

@@ -40,11 +40,13 @@ resume mid-burst at its adapted rung.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
 from repro.fedtrain.schedule import EmaPlateau
+from repro.obs.registry import DEFAULT_REGISTRY
+from repro.obs.trace import EVT_QOS_TRANSITION, NULL_TRACER, session_tid
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,9 +96,18 @@ def compressor_spec(k: int, bits: int) -> str:
 
 
 class QoSController:
-    """Per-session (k, bits) ladder position, driven by congestion."""
+    """Per-session (k, bits) ladder position, driven by congestion.
 
-    def __init__(self, spec: QoSSpec):
+    Every rung move emits a `qos.transition` instant on the session's
+    trace track (when a tracer is attached) and bumps
+    `qos_transitions_total{direction=tighten|relax}` in the registry, so a
+    run trace *explains* each move: the instant's args carry the rung
+    endpoints, the depth/latency observation that forced it, and whether
+    the trigger was acute or chronic.
+    """
+
+    def __init__(self, spec: QoSSpec, *, tracer=NULL_TRACER,
+                 registry=DEFAULT_REGISTRY, sid: Optional[int] = None):
         self.spec = spec
         self.levels = spec.ladder()
         self.level = 0              # index into `levels` (0 = declared top)
@@ -105,6 +116,22 @@ class QoSController:
         self.switches = 0           # total rung moves (bench/report)
         self._pressure = EmaPlateau(spec.ema, spec.min_rel_improve,
                                     spec.sustain)
+        self.tracer = tracer
+        self.registry = registry
+        self.sid = sid              # trace track / labels (None = unbound)
+
+    def _record_move(self, frm: int, direction: str, *, queue_depth: int,
+                     latency_s: float, reason: str) -> None:
+        self.registry.counter("qos_transitions_total",
+                              direction=direction).inc()
+        if self.tracer.enabled:
+            k, bits = self.levels[self.level]
+            self.tracer.instant(
+                EVT_QOS_TRANSITION,
+                tid=session_tid(self.sid) if self.sid is not None else None,
+                sid=self.sid, frm=frm, to=self.level, k=k, bits=bits,
+                direction=direction, reason=reason,
+                queue_depth=queue_depth, latency_ms=latency_s * 1e3)
 
     def k_bits(self) -> Tuple[int, int]:
         return self.levels[self.level]
@@ -127,6 +154,10 @@ class QoSController:
                 self.level += 1
                 self.switches += 1
                 self.cool = 0
+                self._record_move(self.level - 1, "tighten",
+                                  queue_depth=queue_depth,
+                                  latency_s=latency_s,
+                                  reason="acute" if acute else "chronic")
             return
         if queue_depth <= s.low_depth and latency_s <= s.deadline_s / 2:
             self.healthy += 1
@@ -136,6 +167,9 @@ class QoSController:
                 self.switches += 1
                 self.healthy = 0
                 self.cool = 0
+                self._record_move(self.level + 1, "relax",
+                                  queue_depth=queue_depth,
+                                  latency_s=latency_s, reason="healthy")
         else:
             self.healthy = 0
 

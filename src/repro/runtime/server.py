@@ -46,6 +46,10 @@ import numpy as np
 
 from repro.core import wire
 from repro.core.payload import Payload
+from repro.obs.registry import DEFAULT_REGISTRY, MetricsRegistry
+from repro.obs.trace import (EVT_SLOT_ADMIT, EVT_SLOT_EVICT, NULL_TRACER,
+                             SERVE_TID, SPAN_DECODE, SPAN_QUEUE_WAIT,
+                             SPAN_REPLY, SPAN_STEP, session_tid)
 from repro.runtime import steps
 from repro.runtime.arena import SlotArena
 from repro.runtime.batching import BatchingQueue
@@ -82,7 +86,9 @@ class FrameServerBase:
 
     direction = "serving"
 
-    def _init_connections(self, queue: BatchingQueue) -> None:
+    def _init_connections(self, queue: BatchingQueue,
+                          tracer=NULL_TRACER,
+                          registry: Optional[MetricsRegistry] = None) -> None:
         self.queue = queue
         self.sessions: Dict[int, Session] = {}
         self._lock = threading.Lock()
@@ -95,9 +101,52 @@ class FrameServerBase:
         #   loop must not stop before this many sessions exist AND closed
         #   (a corrupt first frame can retire a connection before its
         #   session was ever created — the reconnect needs a live queue)
+        self.tracer = tracer
+        self.registry = registry if registry is not None else DEFAULT_REGISTRY
+        # pre-bound per-frame instruments: the reader/serve hot paths pay a
+        # lock + add, never a registry dict lookup
+        reg = self.registry
+        self._m_frames_up = reg.counter("frames_total", party="server",
+                                        direction="up")
+        self._m_payload_up = reg.counter("payload_bytes_total",
+                                         party="server", direction="up")
+        self._m_framing_up = reg.counter("framing_bytes_total",
+                                         party="server", direction="up")
+        self._m_frames_down = reg.counter("frames_total", party="server",
+                                          direction="down")
+        self._m_bytes_down = reg.counter("wire_bytes_total", party="server",
+                                         direction="down")
+        self._m_faults = reg.counter("faults_detected_total", party="server")
+        self._m_dups = reg.counter("duplicates_total", party="server")
+        self._m_fill = reg.histogram("flush_fill")
+        self._m_qwait = reg.histogram("queue_wait_ms")
+        self._m_depth = reg.gauge("queue_depth")
+        # (sid, seq) -> enqueue clock time; popped at flush into the
+        # `server.queue_wait` span / `queue_wait_ms` histogram
+        self._enq_ts: Dict = {}
 
     def _new_session(self, sid: int, endpoint) -> Session:
         raise NotImplementedError
+
+    def _count_frame_up(self, sess: Session, frame) -> None:
+        """Byte accounting for one accepted uplink frame: the session's
+        legacy `SessionStats` plus the registry's labeled counters."""
+        sess.stats.count_up(frame.header_nbytes, frame.payload_nbytes)
+        self._m_frames_up.inc()
+        self._m_payload_up.inc(frame.payload_nbytes)
+        self._m_framing_up.inc(frame.header_nbytes)
+
+    def _note_enqueue(self, sess: Session, frame) -> None:
+        """Stamp a successfully-enqueued frame; `_process` pops the stamp
+        into the `server.queue_wait` span and `queue_wait_ms` histogram.
+        (dict set/pop are GIL-atomic — reader threads write, serve loop
+        pops)."""
+        self._enq_ts[(sess.id, frame.seq)] = self.queue.clock.monotonic()
+
+    def _count_frame_down(self, sess: Session, nbytes: int) -> None:
+        sess.stats.count_down(nbytes)
+        self._m_frames_down.inc()
+        self._m_bytes_down.inc(nbytes)
 
     def attach(self, endpoint) -> threading.Thread:
         """Register a client channel and start its frame-reader thread.
@@ -129,6 +178,7 @@ class FrameServerBase:
                     if sid_seen is not None else None)
             if sess is not None:
                 sess.stats.faults_detected += 1
+        self._m_faults.inc()
         endpoint.send(wire.encode_error_frame(
             sid_seen if sid_seen is not None else 0, 0,
             wire.error_code(exc), str(exc)))
@@ -157,11 +207,12 @@ class FrameServerBase:
                         f"{self.direction} up direction")
                 sid_seen = frame.session
                 sess = self._session_for(frame.session, endpoint)
-                sess.stats.count_up(frame.header_nbytes, frame.payload_nbytes)
+                self._count_frame_up(sess, frame)
                 try:
                     self.queue.put((sess, frame))
                 except RuntimeError:
                     return              # server shut down under us
+                self._note_enqueue(sess, frame)
         except wire.WireError as e:     # protocol violation from a valid frame
             self._reject(endpoint, sid_seen, e)
         except BaseException as e:      # surfaced by the engine
@@ -220,8 +271,9 @@ class FrameServerBase:
                 return "retired", sid_seen
             sid_seen = frame.session
             sess = self._session_for(frame.session, endpoint)
-            sess.stats.count_up(frame.header_nbytes, frame.payload_nbytes)
+            self._count_frame_up(sess, frame)
             self.queue.put((sess, frame))       # QueueFull surfaces to caller
+            self._note_enqueue(sess, frame)
 
     def _session_for(self, sid: int, endpoint) -> Session:
         with self._lock:
@@ -249,8 +301,11 @@ class StreamingServer(FrameServerBase):
                  *, max_batch: int = 8, max_wait: float = 0.01,
                  dtype=jnp.float32, capacity: Optional[int] = None,
                  x_shape=None, backend: Optional[str] = None,
-                 jit_steps=None, clock: Clock = SYSTEM_CLOCK):
+                 jit_steps=None, clock: Clock = SYSTEM_CLOCK,
+                 tracer=NULL_TRACER,
+                 registry: Optional[MetricsRegistry] = None):
         self.params = params
+        self.clock = clock
         # `jit_steps` (a `jit_serving_steps` pair) lets the engine share
         # compiled programs across runs; direct construction from a bare
         # arena step keeps working and jits here.
@@ -265,7 +320,10 @@ class StreamingServer(FrameServerBase):
         self.stage_tokens = 0               # tokens served by those flushes
         #   (normalizes stage_s to per-token stage costs in the bench)
         self._init_connections(BatchingQueue(max_batch, max_wait,
-                                             clock=clock))
+                                             clock=clock),
+                               tracer=tracer, registry=registry)
+        if tracer.enabled:
+            tracer.name_track(SERVE_TID, "serve loop")
         self.arena: Optional[SlotArena] = None
         self._make_cache = make_cache
         self._capacity = capacity or max_batch
@@ -300,12 +358,20 @@ class StreamingServer(FrameServerBase):
                 if sess.closed and sess.slot >= 0:
                     slot, sess.slot = sess.slot, -1
                     self._pending_resets.append(slot)
+                    self.registry.counter("slot_evictions_total").inc()
+                    self.tracer.instant(EVT_SLOT_EVICT, tid=SERVE_TID,
+                                        sid=sess.id, slot=slot)
                     break
             if slot is None:
                 raise RuntimeError(
                     f"session {sid}: arena full ({self._capacity} slots, "
                     f"none closed) — raise `capacity` to the expected "
                     f"session count")
+        self.registry.counter("slot_admits_total").inc()
+        self.tracer.instant(EVT_SLOT_ADMIT, tid=SERVE_TID, sid=sid,
+                            slot=slot)
+        if self.tracer.enabled:
+            self.tracer.name_track(session_tid(sid), f"session {sid}")
         return Session(id=sid, slot=slot, endpoint=endpoint)
 
     # -- serving -------------------------------------------------------------
@@ -365,9 +431,10 @@ class StreamingServer(FrameServerBase):
                 fresh.append((sess, frame))
                 continue
             sess.stats.duplicates += 1
+            self._m_dups.inc()
             if frame.seq == sess.last_seq and sess.last_reply is not None:
                 sess.endpoint.send(sess.last_reply)
-                sess.stats.count_down(len(sess.last_reply))
+                self._count_frame_down(sess, len(sess.last_reply))
         return fresh
 
     def _bucket(self, n: int) -> int:
@@ -422,6 +489,20 @@ class StreamingServer(FrameServerBase):
             backend=self.backend)
 
     def _process(self, items) -> None:
+        # queue-wait accounting for every frame this flush picked up
+        # (including replays the dedup below drops — they waited too)
+        t_flush = self.clock.monotonic()
+        trace = self.tracer.enabled
+        for sess, frame in items:
+            t_enq = self._enq_ts.pop((sess.id, frame.seq), None)
+            if t_enq is None:
+                continue
+            self._m_qwait.observe((t_flush - t_enq) * 1e3)
+            if trace:
+                self.tracer.complete(SPAN_QUEUE_WAIT, t_enq, t_flush,
+                                     tid=session_tid(sess.id), sid=sess.id,
+                                     seq=frame.seq)
+        self._m_depth.set(len(self.queue))
         items = self._dedup(items)
         with self._lock:
             resets, self._pending_resets = self._pending_resets, []
@@ -440,6 +521,9 @@ class StreamingServer(FrameServerBase):
         if not items:
             return
         self.batch_sizes.append(len(items))
+        self._m_fill.observe(len(items))
+        if trace:
+            ts0 = self.clock.monotonic()
         t0 = time.perf_counter()
         by_meta: Dict = {}
         for i, (_, frame, _slot) in enumerate(items):
@@ -457,6 +541,8 @@ class StreamingServer(FrameServerBase):
                 np.fromiter((items[i][2] for i in idxs), np.int64,
                             len(idxs)),
                 self._bucket(len(idxs)))
+            if trace:
+                ts1 = self.clock.monotonic()
             t1 = time.perf_counter()
             tokens, self.arena.xbuf, self.arena.cache = self._fused_step(
                 self.params, self.arena.xbuf, stacked, slots,
@@ -469,20 +555,30 @@ class StreamingServer(FrameServerBase):
                     meta, [items[i][1].payload for i in idxs],
                     np.fromiter((items[i][2] for i in idxs), np.int64,
                                 len(idxs)))
+            if trace:
+                ts1 = self.clock.monotonic()
             t1 = time.perf_counter()
             tokens, self.arena.cache = self.top_step(
                 self.params, self.arena.xbuf, self.arena.cache,
                 jnp.asarray(active))
         tokens = np.asarray(tokens)
+        if trace:
+            ts2 = self.clock.monotonic()
         t2 = time.perf_counter()
         for sess, frame, slot in items:
             reply = wire.encode_token_frame(sess.id, frame.seq,
                                             tokens[slot])
             sess.last_seq, sess.last_reply = frame.seq, reply
             sess.endpoint.send(reply)
-            sess.stats.count_down(len(reply))
+            self._count_frame_down(sess, len(reply))
         t3 = time.perf_counter()
         self.stage_s["decode"] += t1 - t0
         self.stage_s["step"] += t2 - t1
         self.stage_s["reply"] += t3 - t2
         self.stage_tokens += len(items)
+        if trace:
+            ts3 = self.clock.monotonic()
+            n = len(items)
+            self.tracer.complete(SPAN_DECODE, ts0, ts1, tid=SERVE_TID, n=n)
+            self.tracer.complete(SPAN_STEP, ts1, ts2, tid=SERVE_TID, n=n)
+            self.tracer.complete(SPAN_REPLY, ts2, ts3, tid=SERVE_TID, n=n)

@@ -152,7 +152,7 @@ def _transport(comp: compressors.Compressor, x, rt: Runtime, key,
 # ---------------------------------------------------------------------------
 
 class HostDensifyCounter:
-    """Thread-safe count of host-side dense materializations.
+    """Registry-backed count of host-side dense materializations.
 
     Incremented by every `server_decode` call. The serving/training hot
     paths must keep it flat (they decode on device via
@@ -160,7 +160,22 @@ class HostDensifyCounter:
     written across server reader threads, the serve loop, and test threads
     — hence a locked counter, not a bare module global.
 
-    Use `watch()` to pin a region flat::
+    The count itself lives in the process-wide metrics registry
+    (`obs.registry.DEFAULT_REGISTRY`, metric `host_densify_total`) so it
+    shows up in registry snapshots next to every other runtime metric;
+    this class is the legacy surface over it. The registry metric stays
+    monotonic (Prometheus counter semantics); `reset()` and `watch()` are
+    implemented as baseline offsets on top of it.
+
+    The registry binding happens at first use, not import: this module is
+    imported by `runtime/server.py` while `repro.runtime.__init__` may be
+    mid-execution, and pulling in `repro.obs` (which reaches
+    `repro.testing` → `runtime.transport`) during *this* module's import
+    would re-enter that cycle.
+
+    Use `watch()` to pin a region flat (deprecated: new code should read
+    `host_densify_total` from the registry snapshot instead; kept as a
+    thin shim for existing callers)::
 
         with protocol.HOST_DENSIFY_COUNT.watch() as w:
             run_streaming(...)
@@ -172,24 +187,34 @@ class HostDensifyCounter:
 
     def __init__(self):
         self._lock = threading.Lock()
-        self._value = 0
+        self._counter = None
+        self._offset = 0
+
+    def _bind(self):
+        if self._counter is None:
+            from repro.obs.registry import DEFAULT_REGISTRY
+            self._counter = DEFAULT_REGISTRY.counter("host_densify_total")
+        return self._counter
 
     @property
     def value(self) -> int:
         with self._lock:
-            return self._value
+            return int(self._bind().value) - self._offset
 
     def increment(self) -> None:
-        with self._lock:
-            self._value += 1
+        self._bind().inc()
 
     def reset(self) -> int:
         with self._lock:
-            prior, self._value = self._value, 0
+            total = int(self._bind().value)
+            prior = total - self._offset
+            self._offset = total
             return prior
 
     @contextlib.contextmanager
     def watch(self):
+        # deprecated shim: prefer DEFAULT_REGISTRY.counter(
+        # "host_densify_total").value deltas / registry snapshots
         outer = self
 
         class _Watch:

@@ -1,0 +1,346 @@
+"""Observability layer — registry, tracer, exporters, and the determinism
+contract (docs/observability.md).
+
+Unit coverage for `repro.obs` (metrics registry, tracer event shapes,
+Chrome-trace export + validation), the `protocol.HOST_DENSIFY_COUNT`
+registry shim, and `LatencyStats` streaming-only demotion; then the
+end-to-end pins: a seeded loadgen run with tracing ON writes byte-identical
+Chrome-trace JSON across same-seed runs — clean AND under injected
+`FaultInjector` chaos — whose spans form a laminar family per track, with
+all seven lifecycle spans present, and `run_streaming` carries a per-run
+metrics snapshot that matches the legacy `SessionStats` byte accounting.
+"""
+from __future__ import annotations
+
+import json
+import math
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.models import transformer
+from repro.models.config import SplitConfig
+from repro.obs.export import (check_span_nesting, chrome_trace, dump_json,
+                              validate_chrome_trace)
+from repro.obs.registry import MetricsRegistry
+from repro.obs.trace import (LIFECYCLE_SPANS, NULL_TRACER, SERVE_TID, Tracer,
+                             session_tid)
+from repro.runtime import engine
+from repro.runtime.loadgen import (ArrivalSpec, FleetSpec, LoadGenConfig,
+                                   ServiceModel, SLOSpec, run_loadgen)
+from repro.runtime.metrics import LatencyStats, merged_percentiles
+from repro.split import protocol
+from repro.testing import FaultInjector, FaultPlan, VirtualClock
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_counters_gauges_histograms():
+    reg = MetricsRegistry()
+    c = reg.counter("frames_total", party="client", direction="up")
+    c.inc()
+    c.inc(3)
+    assert c.value == 4
+    assert reg.counter("frames_total", party="client",
+                       direction="up") is c      # same series, same object
+    with pytest.raises(ValueError):
+        c.inc(-1)                                # counters are monotonic
+
+    g = reg.gauge("queue_depth")
+    g.set(7)
+    g.inc(2)
+    g.dec(4)
+    assert g.value == 5
+
+    h = reg.histogram("token_latency_ms")
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 4 and s["min"] == 1.0 and s["max"] == 4.0
+    assert s["mean"] == pytest.approx(2.5)
+    assert 1.0 <= s["p50"] <= 4.0
+
+    # one name is one kind: reusing it as another kind is a bug, not a series
+    with pytest.raises(TypeError):
+        reg.gauge("frames_total")
+
+
+def test_registry_snapshot_and_text_deterministic():
+    def build():
+        reg = MetricsRegistry()
+        # insertion order deliberately scrambled vs label sort order
+        reg.counter("frames_total", party="server", direction="up").inc(2)
+        reg.counter("frames_total", party="client", direction="up").inc(1)
+        reg.gauge("queue_depth").set(3)
+        reg.histogram("flush_fill").observe(8)
+        return reg
+
+    a, b = build(), build()
+    assert a.snapshot() == b.snapshot()
+    assert a.render_text() == b.render_text()
+    snap = a.snapshot()
+    labels = [s["labels"] for s in snap["frames_total"]["series"]]
+    assert labels == sorted(labels, key=lambda d: sorted(d.items()))
+    text = a.render_text()
+    assert 'frames_total{direction="up",party="client"} 1' in text
+
+
+# ---------------------------------------------------------------------------
+# tracer + export
+# ---------------------------------------------------------------------------
+
+def test_tracer_spans_instants_and_export_shapes():
+    vc = VirtualClock()
+    tr = Tracer(clock=vc)
+    tr.name_track(SERVE_TID, "serve loop")
+    tr.name_track(SERVE_TID, "renamed")          # idempotent: first name wins
+    with tr.span("outer", tid=session_tid(0), sid=0):
+        vc.advance_to(1.0)
+        with tr.span("inner", tid=session_tid(0)):
+            vc.advance_to(1.5)
+    tr.instant("qos.transition", tid=session_tid(0), frm=0, to=1)
+    tr.complete("server.queue_wait", 0.25, 0.75, tid=session_tid(0))
+    tr.complete("clamped", 2.0, 1.0)             # negative dur clamps to 0
+
+    obj = chrome_trace(tr)
+    assert validate_chrome_trace(obj) == []
+    assert check_span_nesting(obj["traceEvents"]) == []
+    by_name = {e["name"]: e for e in obj["traceEvents"]}
+    assert by_name["thread_name"]["args"]["name"] == "serve loop"
+    assert by_name["inner"]["ts"] == pytest.approx(1.0e6)
+    assert by_name["inner"]["dur"] == pytest.approx(0.5e6)
+    assert by_name["qos.transition"]["ph"] == "i"
+    assert by_name["qos.transition"]["s"] == "t"
+    assert by_name["clamped"]["dur"] == 0.0
+
+    # null tracer: no events, reusable span, harmless methods
+    with NULL_TRACER.span("x"):
+        pass
+    NULL_TRACER.instant("y")
+    assert NULL_TRACER.events() == [] and not NULL_TRACER.enabled
+
+
+def test_export_validation_catches_malformed_events():
+    assert validate_chrome_trace({}) != []
+    assert validate_chrome_trace({"traceEvents": "nope"}) != []
+    bad = {"traceEvents": [
+        {"ph": "X", "ts": 0, "pid": 0, "tid": 0},            # no name
+        {"name": "z", "ph": "Z", "ts": 0, "pid": 0, "tid": 0},
+        {"name": "n", "ph": "X", "ts": -1, "pid": 0, "tid": 0, "dur": -2},
+        {"name": "i", "ph": "i", "ts": 0, "pid": 0, "tid": 0},  # no scope
+    ]}
+    problems = validate_chrome_trace(bad)
+    assert len(problems) >= 4
+
+
+def test_span_nesting_check_flags_straddles_not_abutments():
+    # genuine straddle: [0, 10] vs [5, 15] on one track
+    bad = [{"ph": "X", "pid": 0, "tid": 0, "ts": 0, "dur": 10, "name": "a"},
+           {"ph": "X", "pid": 0, "tid": 0, "ts": 5, "dur": 10, "name": "b"}]
+    assert check_span_nesting(bad) != []
+    # abutting spans with sub-quantum float noise (the ts+dur error of
+    # wall-clock-sized µs stamps) must NOT read as straddling
+    t = 14_386_434_149.752
+    ok = [{"ph": "X", "pid": 0, "tid": 0, "ts": t, "dur": 1184.044,
+           "name": "step"},
+          {"ph": "X", "pid": 0, "tid": 0, "ts": t + 1184.0440006,
+           "dur": 92.883, "name": "reply"}]
+    assert check_span_nesting(ok) == []
+    # different tracks never interact
+    two = [{"ph": "X", "pid": 0, "tid": 0, "ts": 0, "dur": 10, "name": "a"},
+           {"ph": "X", "pid": 0, "tid": 1, "ts": 5, "dur": 10, "name": "b"}]
+    assert check_span_nesting(two) == []
+
+
+def test_dump_json_deterministic():
+    def build():
+        vc = VirtualClock()
+        tr = Tracer(clock=vc)
+        for i in range(5):
+            vc.advance_to(i * 0.1)
+            tr.instant("tick", tid=i, i=i)
+        return tr
+
+    assert dump_json(build()) == dump_json(build())
+    assert dump_json(build()).endswith("\n")
+
+
+# ---------------------------------------------------------------------------
+# HOST_DENSIFY registry shim
+# ---------------------------------------------------------------------------
+
+def test_host_densify_counter_feeds_registry():
+    from repro.obs.registry import DEFAULT_REGISTRY
+    cnt = protocol.HOST_DENSIFY_COUNT
+    reg_counter = DEFAULT_REGISTRY.counter("host_densify_total")
+    cnt.reset()
+    base = reg_counter.value
+    assert cnt.value == 0 and cnt == 0
+    cnt.increment()
+    cnt.increment()
+    assert cnt.value == 2 and int(cnt) == 2
+    # the registry series is monotonic even across legacy reset()
+    assert reg_counter.value == base + 2
+    cnt.reset()
+    assert cnt.value == 0
+    assert reg_counter.value == base + 2
+    with cnt.watch() as w:              # deprecated shim still works
+        cnt.increment()
+    assert w.delta == 1
+    cnt.reset()
+
+
+# ---------------------------------------------------------------------------
+# LatencyStats streaming-only + merged_percentiles keys
+# ---------------------------------------------------------------------------
+
+def test_latency_stats_streaming_only_demotion():
+    rng = np.random.RandomState(0)
+    xs = rng.exponential(0.02, size=400)
+    ls = LatencyStats(max_exact_samples=100)
+    for x in xs:
+        ls.add(float(x))
+    assert ls.streaming_only and ls.samples == [] and len(ls) == 400
+    rep = ls.report()
+    assert rep["streaming_only"] is True
+    assert rep["n"] == 400
+    assert rep["mean_ms"] == pytest.approx(float(xs.mean()) * 1e3)
+    assert rep["max_ms"] == pytest.approx(float(xs.max()) * 1e3)
+    # in streaming-only mode the pXX keys ARE the P² estimates
+    for tag in ("p50", "p95", "p99"):
+        assert rep[f"{tag}_ms"] == rep[f"p2_{tag}_ms"]
+    exact = LatencyStats()
+    for x in xs:
+        exact.add(float(x))
+    assert exact.report()["streaming_only"] is False
+    # same schema either way, and the P² p50 tracks the exact one
+    assert set(rep) == set(exact.report())
+    assert rep["p50_ms"] == pytest.approx(exact.report()["p50_ms"],
+                                          rel=0.15)
+
+
+def test_merged_percentiles_same_keys_empty_and_populated():
+    full = merged_percentiles([[0.01, 0.02], [0.03]])
+    empty = merged_percentiles([])
+    also_empty = merged_percentiles([[], []])
+    assert set(full) == set(empty) == set(also_empty) == {
+        "p50_ms", "p95_ms", "p99_ms"}
+    assert all(math.isnan(v) for v in empty.values())
+    assert full["p50_ms"] == pytest.approx(20.0)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: deterministic traces, clean + chaos
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = configs.get("qwen3-8b", smoke=True).with_(
+        split=SplitConfig(cut_layer=1, compressor="randtopk", k=16))
+    params = transformer.init_model(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _lg(seed, **kw):
+    base = dict(
+        seed=seed, duration_s=1.5,
+        arrivals=ArrivalSpec(process="mmpp", rate=12.0, burst_rate=24.0,
+                             mean_calm_s=1.0, mean_burst_s=1.0),
+        fleet=FleetSpec(compressors=("randtopk:k=16",), prompt_len=(2, 3),
+                        gen=(3, 5), bandwidth_Bps=400_000.0),
+        service=ServiceModel(flush_overhead_s=1e-3, per_row_s=1e-4,
+                             per_byte_s=3e-5),
+        slo=SLOSpec(p99_ms=250.0, max_reject_frac=1.0),
+        capacity=8, max_batch=4, max_wait=0.004, admission_depth=16)
+    base.update(kw)
+    return LoadGenConfig(**base)
+
+
+def _trace_bytes(smoke, tmp_path, tag, **kw):
+    cfg, params = smoke
+    path = tmp_path / f"{tag}.json"
+    report = run_loadgen(cfg, _lg(7), params=params, trace_path=path, **kw)
+    return path.read_bytes(), report
+
+
+def test_loadgen_trace_bit_identical_clean(smoke, tmp_path):
+    b1, r1 = _trace_bytes(smoke, tmp_path, "clean1")
+    b2, r2 = _trace_bytes(smoke, tmp_path, "clean2")
+    assert b1 == b2
+    assert r1["trace_events"] == r2["trace_events"] > 0
+    obj = json.loads(b1)
+    assert validate_chrome_trace(obj) == []
+    assert check_span_nesting(obj["traceEvents"]) == []
+    names = {e["name"] for e in obj["traceEvents"]}
+    assert all(s in names for s in LIFECYCLE_SPANS)
+
+
+def test_loadgen_trace_bit_identical_under_chaos(smoke, tmp_path):
+    plan = FaultPlan(seed=11, corrupt=0.06, drop=0.05, duplicate=0.05,
+                     reorder=0.03, max_faults=30)
+    b1, r1 = _trace_bytes(smoke, tmp_path, "chaos1",
+                          wrap_endpoint=FaultInjector(plan))
+    b2, r2 = _trace_bytes(smoke, tmp_path, "chaos2",
+                          wrap_endpoint=FaultInjector(plan))
+    assert b1 == b2
+    obj = json.loads(b1)
+    assert validate_chrome_trace(obj) == []
+    assert check_span_nesting(obj["traceEvents"]) == []
+    # chaos leaves a recovery record in the trace and the registry
+    faults = r1["fault_counters"]
+    assert (faults["client_faults_detected"] + faults["replays"]
+            + faults["duplicates"]) > 0
+
+
+@pytest.mark.parametrize("seed", [1, 5, 23])
+def test_span_nesting_fuzz_over_concurrent_sessions(smoke, tmp_path, seed):
+    cfg, params = smoke
+    path = tmp_path / f"fuzz{seed}.json"
+    run_loadgen(cfg, _lg(seed, capacity=6, max_batch=3), params=params,
+                trace_path=path)
+    obj = json.loads(path.read_bytes())
+    assert validate_chrome_trace(obj) == []
+    assert check_span_nesting(obj["traceEvents"]) == []
+
+
+def test_run_streaming_metrics_snapshot_matches_session_stats(smoke):
+    cfg, params = smoke
+    tracer = Tracer()
+    res = engine.run_streaming(cfg, n_clients=3, prompt_len=3, gen=4,
+                               max_batch=3, max_wait=0.01, params=params,
+                               tracer=tracer)
+    names = {e["name"] for e in tracer.events()}
+    assert all(s in names for s in LIFECYCLE_SPANS)
+    assert check_span_nesting(chrome_trace(tracer)["traceEvents"]) == []
+
+    snap = res["metrics"]
+    series = {(name, tuple(sorted(s["labels"].items()))): s
+              for name in snap for s in snap[name]["series"]}
+
+    def val(name, **labels):
+        return series[(name, tuple(sorted(labels.items())))]["value"]
+
+    up_frames = sum(s["frames_up"] for s in res["client_stats"])
+    up_payload = sum(s["payload_bytes_up"] for s in res["client_stats"])
+    assert val("frames_total", party="client", direction="up") == up_frames
+    assert val("frames_total", party="server", direction="up") == up_frames
+    assert val("payload_bytes_total", party="client",
+               direction="up") == up_payload
+    assert val("tokens_total", party="client") == 3 * 4
+    assert val("slot_admits_total") == 3
+    qw = series[("queue_wait_ms", ())]
+    assert qw["count"] == up_frames
+
+
+def test_run_streaming_registry_isolated_per_run(smoke):
+    cfg, params = smoke
+    r1 = engine.run_streaming(cfg, n_clients=2, prompt_len=2, gen=3,
+                              max_batch=2, max_wait=0.01, params=params)
+    r2 = engine.run_streaming(cfg, n_clients=2, prompt_len=2, gen=3,
+                              max_batch=2, max_wait=0.01, params=params)
+    # a fresh registry per run: identical runs, identical counters
+    assert r1["metrics"]["frames_total"] == r2["metrics"]["frames_total"]
