@@ -42,7 +42,9 @@ from __future__ import annotations
 import argparse
 import gc
 import json
+import os
 import pathlib
+import subprocess
 import sys
 
 import jax
@@ -228,6 +230,150 @@ def _roofline_rows(cfg, params, emit) -> list:
     return out
 
 
+def _capacity_meshes(smoke: bool):
+    """(n_devices, mesh-axis overrides) sweep points. Data-only meshes
+    scale slots; the model/pod meshes additionally exercise (and audit)
+    the sharded step's collectives."""
+    devs = (1, 8) if smoke else (1, 2, 4, 8)
+    specs = [(n, {}) for n in devs]
+    specs += ([(8, {"model": 4})] if smoke
+              else [(8, {"model": 4}), (8, {"model": 2, "pod": 2})])
+    return specs
+
+
+def _collective_audit_row(cfg, params, mesh, emit) -> dict:
+    """Predicted-vs-parsed collective bytes of the sharded arena step at
+    `mesh` — the `serving_step_costs` companion for the collective ring
+    term. Intrinsic collectives (the Megatron row gather, the exact-argmax
+    pmax/pmin, the pod-ring permutes) must match
+    `analysis.serving_collective_costs` byte-exactly; partitioner staging
+    on top is bounded by `analysis.serving_collective_slack` per op."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    rt = Runtime(mesh=None, training=False)
+    cut = cfg.split.cut_layer
+    cap = 8
+    cache = jax.tree.map(
+        lambda a: jnp.stack([a] * cap),
+        transformer.init_cache(params, cfg, rt, 1, 8))
+    xbuf = jnp.zeros((cap + 1, 1, 1, cfg.d_model), jnp.float32)
+    active = jnp.ones((cap,), bool)
+    axes = tuple(mesh.axis_names)
+    rows = axes if len(axes) > 1 else axes[0]
+    rep = NamedSharding(mesh, P())
+    row = lambda a: NamedSharding(                          # noqa: E731
+        mesh, P(rows, *([None] * (a.ndim - 1))))
+    step = __import__("repro.runtime.steps", fromlist=["steps"]) \
+        .make_arena_top_step(cfg, rt, cut, mesh=mesh)
+    in_sh = (jax.tree.map(lambda a: rep, params), rep,
+             jax.tree.map(row, cache), rep)
+    txt = jax.jit(step, in_shardings=in_sh).lower(
+        params, xbuf, cache, active).compile().as_text()
+    stats = hlo_mod.collective_bytes(txt)
+    pred, pred_total = analysis.serving_collective_costs(
+        cfg, cap, dict(mesh.shape))
+    slack = analysis.serving_collective_slack(cfg, cap, dict(mesh.shape))
+    ok = True
+    for op in sorted(set(pred) | set(stats.raw_bytes)):
+        m = stats.raw_bytes.get(op, 0.0)
+        p = pred.get(op, 0.0)
+        ok &= p - 1e-9 <= m <= p + slack.get(op, 0.0) + 1e-9
+    mesh_desc = "x".join(f"{a}{s}" for a, s in mesh.shape.items())
+    emit(f"capacity,collectives,mesh={mesh_desc},"
+         f"pred_link_B={pred_total:.0f},"
+         f"meas_link_B={stats.total_link_bytes:.0f},ok={ok}")
+    return dict(mesh=dict(mesh.shape), predicted_B=pred,
+                measured_B=stats.raw_bytes,
+                predicted_link_total_B=pred_total,
+                measured_link_total_B=stats.total_link_bytes,
+                slack_B=slack, ok=bool(ok))
+
+
+def _counter_total(snap: dict, name: str) -> int:
+    return int(sum(r["value"]
+                   for r in snap.get(name, {}).get("series", [])))
+
+
+def capacity_worker(smoke: bool, emit=print) -> dict:
+    """Runs in a dedicated 8-forced-device subprocess: the slots x devices
+    capacity/utilization sweep plus the sharded-step collective audit.
+
+    Every sweep point must serve tokens BIT-IDENTICAL to the uncontended
+    single-device reference (eviction/readmission and row sharding are
+    invisible to clients); contended points (2 admitted slots, 8 sessions)
+    must actually evict and readmit."""
+    from repro.launch.mesh import make_serving_mesh
+
+    assert jax.device_count() == 8, jax.device_count()
+    cfg = configs.get("qwen3-8b", smoke=True).with_(
+        split=SplitConfig(cut_layer=1, compressor="randtopk", k=16))
+    params = transformer.init_model(jax.random.key(0), cfg)
+    kw = dict(n_clients=8, prompt_len=2, gen=6, max_batch=4,
+              max_wait=0.02, params=params, seed=0)
+    ref = engine.run_streaming(cfg, **kw)["tokens"]
+
+    points, ok = [], True
+    for n_dev, spec in _capacity_meshes(smoke):
+        mesh = make_serving_mesh(n_dev, **spec)
+        mesh_desc = "x".join(f"{a}{s}" for a, s in mesh.shape.items())
+        for slots in (2, 8):
+            gc.collect()
+            res = engine.run_streaming(cfg, mesh=mesh, capacity=slots, **kw)
+            snap = res["metrics"]
+            ev = _counter_total(snap, "slot_evictions_total")
+            re_ = _counter_total(snap, "slot_readmissions_total")
+            exact = bool(np.array_equal(ref, res["tokens"]))
+            churn_ok = ev >= 1 and re_ >= 1 if slots == 2 else True
+            ok &= exact and churn_ok
+            points.append(dict(
+                mesh=mesh_desc, devices=n_dev, slots=slots,
+                padded_capacity=slots + (-slots) % n_dev,
+                tokens_per_s=round(res["tokens_per_s"], 2),
+                mean_batch_fill=round(float(np.mean(res["batch_sizes"])), 3),
+                utilization=round(
+                    float(np.mean(res["batch_sizes"])) / slots, 3),
+                evictions=ev, readmissions=re_,
+                tokens_exact=exact))
+            emit(f"capacity,run,mesh={mesh_desc},slots={slots},"
+                 f"tok_per_s={res['tokens_per_s']:.1f},evictions={ev},"
+                 f"readmissions={re_},tokens_exact={exact}")
+
+    audits = [_collective_audit_row(cfg, params, make_serving_mesh(n, **s),
+                                    emit)
+              for n, s in _capacity_meshes(smoke) if n == 8]
+    ok &= all(a["ok"] for a in audits)
+    return {"points": points, "collectives": audits, "ok": bool(ok)}
+
+
+def _capacity_sweep(emit, smoke: bool) -> dict:
+    """Spawn `--capacity-worker` under 8 forced host devices (this process
+    already initialized single-device jax) and collect its JSON section."""
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "JAX_PLATFORMS": "cpu",
+           "PYTHONPATH": "src" + (":" + os.environ["PYTHONPATH"]
+                                  if os.environ.get("PYTHONPATH") else "")}
+    cmd = [sys.executable, str(ROOT / "benchmarks" / "serve_throughput.py"),
+           "--capacity-worker"] + (["--smoke"] if smoke else [])
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=1800,
+                       env=env, cwd=str(ROOT))
+    if r.returncode != 0:
+        emit(f"capacity,worker_failed,rc={r.returncode}")
+        emit(r.stdout[-2000:] + r.stderr[-2000:])
+        return {"points": [], "collectives": [], "ok": False}
+    section = None
+    for line in r.stdout.splitlines():
+        if line.startswith("CAPACITY_JSON "):
+            section = json.loads(line[len("CAPACITY_JSON "):])
+        elif line.startswith("capacity,"):
+            emit(line)
+    if section is None:
+        emit("capacity,worker_failed,no_json")
+        return {"points": [], "collectives": [], "ok": False}
+    return section
+
+
 def main(emit=print, smoke: bool = False) -> bool:
     cfg = configs.get("qwen3-8b", smoke=True).with_(
         split=SplitConfig(cut_layer=1, compressor="randtopk", k=16))
@@ -349,11 +495,18 @@ def main(emit=print, smoke: bool = False) -> bool:
             ok_all &= r["ok"]
         all_rows.extend(rows)
 
+    # sharded-arena capacity sweep (+ collective audit) in its own
+    # 8-device subprocess — this process stays single-device
+    capacity = _capacity_sweep(emit, smoke)
+    emit(f"capacity_check,sweep,tokens_exact_and_collectives,"
+         f"{capacity['ok']}")
+
     dense_B = d * 4
     emit(f"serve_check,all_compressors,measured_within_5pct,{ok_all}")
     ok_all &= roofline_ok
     ok_all &= ratio_ok
     ok_all &= obs_ok
+    ok_all &= capacity["ok"]
     point = {"bench": "serve_throughput", "smoke": bool(smoke),
              "arch": cfg.name, "d_model": d,
              "uncompressed_B_per_token": dense_B,
@@ -369,6 +522,7 @@ def main(emit=print, smoke: bool = False) -> bool:
                      "ratio_floor": OBS_RATIO_FLOOR, "reps": OBS_REPS,
                      "trace_events": obs_events, "ok": bool(obs_ok)},
              "roofline": roofline_rows,
+             "capacity": capacity,
              "rows": all_rows, "ok": bool(ok_all)}
     # benchmarks/loadgen.py owns the `loadgen` section of the same file;
     # carry it across this bench's rewrite instead of clobbering it
@@ -388,5 +542,11 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="single 8-client dense+randtopk mix point")
+    ap.add_argument("--capacity-worker", action="store_true",
+                    help=argparse.SUPPRESS)  # internal: 8-device subprocess
     args = ap.parse_args()
+    if args.capacity_worker:
+        section = capacity_worker(args.smoke)
+        print("CAPACITY_JSON " + json.dumps(section))
+        sys.exit(0 if section["ok"] else 1)
     sys.exit(0 if main(smoke=args.smoke) else 1)

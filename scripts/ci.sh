@@ -1,25 +1,45 @@
 #!/usr/bin/env bash
 # Tier-1 verification — the command the driver runs after every PR.
 #
-#   scripts/ci.sh            # full tier-1 suite + docs check + serving smoke
-#   scripts/ci.sh -m "not slow"   # quick pass (skip subprocess dry-runs)
+#   scripts/ci.sh            # fast tier, smokes/gates, then the full suite
+#   scripts/ci.sh -m "not slow"   # forwards extra args to the FULL pass only
+#
+# Stages run cheapest-first so a regression fails in minutes, not after the
+# 9-minute full suite; each stage prints its wall time.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+STAGE_T0=$SECONDS
+stage() {
+    local now=$SECONDS
+    echo "== ci stage: $1 (previous stage took $((now - STAGE_T0))s) =="
+    STAGE_T0=$now
+}
+
 # README/docs links must point at files that exist
+stage "docs check"
 python scripts/check_docs.py
+
+# fast tier: everything not marked `slow` (the slow marks cover the
+# subprocess dry-runs, forced-8-device mesh suites, and multi-step
+# training loops). Runs first so unit-level breakage surfaces in under
+# five minutes; the full pass below still runs every test.
+stage "pytest fast tier (-m 'not slow')"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m "not slow"
 
 # fused decode kernel parity: the Pallas (interpret-mode on CPU) decode
 # family must match the two-pass XLA decode bit-for-bit (<= 1 ulp for
 # quant kinds) for every payload kind before anything downstream runs on
 # top of it — a codegen regression here silently corrupts every served
 # activation
+stage "decode kernel parity"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q tests/test_decode_kernels.py
 
 # seeded chaos smoke: streaming + fedtrain under an injected FaultPlan
 # (corrupt/truncate/drop/duplicate/reorder) must complete with tokens and
 # losses identical to the clean run — CRC catches every corruption, sessions
 # reconnect and resume via seq replay
+stage "chaos smoke"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/chaos_smoke.py
 
 # streaming serving smoke + perf gate: measured bytes must match the
@@ -29,9 +49,13 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/chaos_smoke.py
 # pinned in the bench — the compressed path must remain the fast path; a
 # regression to host-side densification fails here. Also audits the
 # compiled decode + fused-step programs against the closed-form roofline
-# predictions (exact flops, calibrated byte bands). Writes
-# BENCH_serve.json with the ratio, floor, per-stage timings, and
-# roofline rows.
+# predictions (exact flops, calibrated byte bands), and runs the sharded-
+# arena capacity sweep in an 8-forced-device subprocess (slots x devices
+# tokens/s, eviction/readmission churn, bit-exact tokens at every point,
+# collective-byte audit of the sharded step). Writes BENCH_serve.json
+# with the ratio, floor, per-stage timings, roofline rows, and the
+# capacity section.
+stage "serve throughput bench + gates"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/serve_throughput.py --smoke
 
 # observability smoke: a short seeded chaos loadgen run with tracing ON,
@@ -41,6 +65,7 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/serve_throughput.py 
 # byte-identical across the two same-seed runs; also re-checks the
 # tracing-overhead gate the bench above recorded in BENCH_serve.json's
 # `obs` section (on/off throughput ratio >= its pinned floor)
+stage "trace smoke"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/trace_smoke.py
 
 # production-traffic SLO gate: open-loop MMPP arrivals on a virtual clock
@@ -49,11 +74,16 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python scripts/trace_smoke.py
 # SLO with no rejected sessions while the static comparator violates it;
 # fully deterministic (exact comparison, no jitter tolerance). Merges a
 # `loadgen` section into BENCH_serve.json.
+stage "loadgen SLO gate"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/loadgen.py --smoke
 
 # fedtrain smoke: over-the-wire split training; randtopk bytes must match
 # the Table-2 fwd+bwd analytics, adaptive-k and async must hold
 # accuracy-per-measured-byte >= fixed-k topk
+stage "fedtrain convergence smoke"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python benchmarks/fedtrain_convergence.py --smoke
 
+stage "pytest full suite"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+stage "done"

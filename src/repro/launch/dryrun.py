@@ -15,7 +15,6 @@ Usage:
 import argparse
 import json
 import sys
-import time
 import traceback
 
 import jax
@@ -26,6 +25,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import make_serve_step, make_train_step
 from repro.models.config import Runtime, SplitConfig
 from repro.roofline import analysis
+from repro.testing.clock import Clock, SYSTEM_CLOCK
 
 
 def _cut_for(cfg):
@@ -83,13 +83,16 @@ def lower_one(cfg, shape, mesh, *, runtime_kw=None):
 
 
 def run_combo(arch: str, shape_name: str, *, multi_pod=False, split=None,
-              k=64, alpha=0.1, verbose=True, runtime_kw=None):
+              k=64, alpha=0.1, verbose=True, runtime_kw=None,
+              clock: Clock = SYSTEM_CLOCK):
+    """`clock` (`testing.clock`) feeds the compile-time report — injectable
+    so tests can pin the printed timing deterministically."""
     cfg, shape = build_config(arch, shape_name, split=split, k=k, alpha=alpha)
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.devices.size
-    t0 = time.time()
+    t0 = clock.monotonic()
     compiled, rt = lower_one(cfg, shape, mesh, runtime_kw=runtime_kw)
-    dt = time.time() - t0
+    dt = clock.monotonic() - t0
     tokens = shape.batch * (shape.seq if shape.kind != "decode" else 1)
     mf = analysis.model_flops(cfg, tokens=tokens,
                               training=(shape.kind == "train"))

@@ -10,7 +10,6 @@ Runs a real training loop (synthetic pipeline, AdamW, checkpointing every
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 
@@ -22,9 +21,13 @@ from repro.models import transformer
 from repro.models.common import count_params
 from repro.models.config import Runtime, SplitConfig
 from repro.optim import adamw_init
+from repro.testing.clock import Clock, SYSTEM_CLOCK
 
 
-def main(argv=None):
+def main(argv=None, *, clock: Clock = SYSTEM_CLOCK):
+    """CLI entry; `clock` is the injectable time source every elapsed-time
+    print reads (`testing.clock`) — wall time by default, a `VirtualClock`
+    in tests so logged timings are deterministic instead of machine noise."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b")
     ap.add_argument("--smoke", action="store_true",
@@ -93,7 +96,7 @@ def main(argv=None):
     pipe = TokenPipeline(cfg, args.batch, args.seq, rt=rt)
     step_fn = jax.jit(make_train_step(cfg, rt, lr=args.lr),
                       donate_argnums=(0, 1))
-    t0 = time.time()
+    t0 = clock.monotonic()
     for step in range(start, args.steps):
         batch = pipe.next_batch(step)
         key = jax.random.fold_in(jax.random.key(1), step)
@@ -102,7 +105,7 @@ def main(argv=None):
             m = {k: float(v) for k, v in metrics.items()}
             print(f"step {step:5d} loss={m['loss']:.4f} ce={m['ce']:.4f} "
                   f"gnorm={m['grad_norm']:.2f} "
-                  f"({(time.time()-t0):.1f}s)")
+                  f"({(clock.monotonic()-t0):.1f}s)")
         if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
             save(args.ckpt_dir, step + 1, params)
             save(args.ckpt_dir + "/opt", step + 1, opt)

@@ -22,6 +22,14 @@ from repro.compat import shard_map
 from repro.models.config import Runtime
 
 
+def gather_seq_local(y_l, axis_name: str = "model"):
+    """Per-shard body of `gather_seq`: all-gather a seq-sharded activation
+    along `axis_name` back to full S. Callable from inside any enclosing
+    `shard_map` body (the sharded arena step reuses it) as well as from the
+    GSPMD wrapper below."""
+    return jax.lax.all_gather(y_l, axis_name, axis=1, tiled=True)
+
+
 def gather_seq(y, rt: Runtime):
     """Explicit bf16 all-gather of a (B, S/model, d) seq-sharded activation
     to full-S replicated. GSPMD left to its own devices hoists this gather
@@ -41,10 +49,7 @@ def gather_seq(y, rt: Runtime):
     in_spec = P(batch_axes if batch_axes else None, "model", None)
     out_spec = P(batch_axes if batch_axes else None, None, None)
 
-    def f(y_l):
-        return jax.lax.all_gather(y_l, "model", axis=1, tiled=True)
-
-    return shard_map(f, mesh=mesh, in_specs=(in_spec,),
+    return shard_map(gather_seq_local, mesh=mesh, in_specs=(in_spec,),
                      out_specs=out_spec, check_vma=False)(y)
 
 
@@ -68,12 +73,52 @@ def out_proj_rs(h, w, rt: Runtime, *, w_spec=P("model", "data")):
     o_spec = P(batch_axes if batch_axes else None, "model", None)
 
     def f(h_l, w_l):
-        if "data" in tuple(w_spec):
-            axis = tuple(w_spec).index("data")
-            w_l = jax.lax.all_gather(w_l, "data", axis=axis, tiled=True)
-        y = h_l @ w_l.astype(h_l.dtype)                    # partial over model
-        return jax.lax.psum_scatter(y, "model", scatter_dimension=1,
-                                    tiled=True)
+        return out_proj_rs_local(h_l, w_l, w_spec=w_spec)
 
     return shard_map(f, mesh=mesh, in_specs=(h_spec, w_spec),
                      out_specs=o_spec)(h, w)
+
+
+def out_proj_rs_local(h_l, w_l, *, w_spec=P("model", "data"),
+                      axis_name: str = "model"):
+    """Per-shard body of `out_proj_rs`: partial product over the local ff
+    shard, reduce-scattered along the sequence axis. Exposed so an
+    enclosing `shard_map` (training/prefill fusions) can emit the same
+    collective schedule without nesting shard_maps."""
+    if "data" in tuple(w_spec):
+        axis = tuple(w_spec).index("data")
+        w_l = jax.lax.all_gather(w_l, "data", axis=axis, tiled=True)
+    y = h_l @ w_l.astype(h_l.dtype)                # partial over `axis_name`
+    return jax.lax.psum_scatter(y, axis_name, scatter_dimension=1,
+                                tiled=True)
+
+
+def vocab_parallel_argmax(logits_l, axis_name: str = "model"):
+    """Exact greedy argmax over a vocab-sharded last axis, inside shard_map.
+
+    Each rank holds a contiguous (..., V/model) shard of the logits (the
+    unembed matmul with the vocab dimension split is NOT a contraction
+    split, so the shards themselves are bit-identical to columns of the
+    single-device logits). The global argmax is then recovered without
+    materializing full logits anywhere:
+
+      1. per-rank max + argmax over the local shard;
+      2. `pmax` for the global max;
+      3. every rank whose local max equals the global max proposes its
+         local argmax offset by its shard's base column; `pmin` over the
+         proposals returns the LOWEST global index attaining the max —
+         exactly `jnp.argmax`'s first-occurrence tie-breaking.
+
+    Two scalar-per-row collectives replace an all-gather of the vocab axis.
+    Bit-exact at any model-axis size (pmax over disjoint column maxima is
+    order-insensitive; index selection never compares floats across ranks
+    beyond equality with the global max).
+    """
+    v_local = logits_l.shape[-1]
+    base = jax.lax.axis_index(axis_name).astype(jnp.int32) * v_local
+    local_max = jnp.max(logits_l, axis=-1)
+    global_max = jax.lax.pmax(local_max, axis_name)
+    local_idx = jnp.argmax(logits_l, axis=-1).astype(jnp.int32) + base
+    proposal = jnp.where(local_max == global_max, local_idx,
+                         jnp.iinfo(jnp.int32).max)
+    return jax.lax.pmin(proposal, axis_name).astype(jnp.int32)

@@ -197,3 +197,80 @@ def serving_step_costs(cfg, cut: int, capacity: int, max_len: int,
     score_dots = 2 * cfg.n_heads * cfg.hd * max_len
     flops = 2.0 * capacity * (top_matmul_params(cfg, cut) + score_dots)
     return flops, 2.0 * state_nbytes
+
+
+def serving_collective_costs(cfg, capacity: int, mesh_axes,
+                             *, dtype_bytes: int = 4):
+    """Predicted per-device collective bytes of the SHARDED arena step
+    (`runtime.steps._make_sharded_arena_step`), per HLO op, under the same
+    conventions as `hlo.collective_bytes`: raw bytes are each collective
+    instruction's per-device output size, and the returned total applies
+    the per-op ring factors (`hlo.RING_FACTOR`).
+
+    The sharded step's collectives are fully enumerable from its
+    decomposition (docs/sharding.md):
+
+      * 'model' axis: the Megatron-SP row gather (`tp.gather_seq_local`,
+        one all-gather of the rank's hidden row block) plus the exact
+        vocab-parallel argmax (one f32 pmax + one s32 pmin, each an
+        all-reduce over a scalar per gathered row).
+      * 'pod' axis: the cut-boundary ring crossing — one collective-permute
+        of the local activation row block forward and one of the gathered
+        token rows back (`protocol.pod_ring_perm` and its inverse).
+
+    `mesh_axes` is the mesh's `{axis: size}` mapping; `capacity` the padded
+    arena row count. Rows shard over all axes flattened, so the per-device
+    row block is `capacity / n_devices` and the model-group gathered block
+    is that times the model-axis size."""
+    sizes = dict(mesh_axes)
+    n_model = sizes.get("model", 1)
+    n_pod = sizes.get("pod", 1)
+    n_dev = 1
+    for s in sizes.values():
+        n_dev *= s
+    rows_local = capacity // n_dev          # per-device row shard
+    rows_group = rows_local * n_model       # rows a model group reassembles
+    d = cfg.d_model
+    per_op: Dict[str, float] = {}
+    if n_model > 1:
+        per_op["all-gather"] = float(rows_group * d * dtype_bytes)
+        # pmax f32[rows, 1] + pmin s32[rows, 1]: 4 bytes each per row
+        per_op["all-reduce"] = float(2 * rows_group * 4)
+    if n_pod > 1:
+        per_op["collective-permute"] = float(
+            rows_local * d * dtype_bytes     # activation block forward
+            + rows_group * 4)                # s32 token rows back
+    total = sum(hlo_mod.RING_FACTOR.get(op, 1.0) * b
+                for op, b in per_op.items())
+    return per_op, total
+
+
+def serving_collective_slack(cfg, capacity: int, mesh_axes,
+                             *, dtype_bytes: int = 4):
+    """Per-op byte SLACK the sharded-step collective audit allows on top of
+    `serving_collective_costs` — non-intrinsic traffic XLA's partitioner
+    adds, each with a closed-form bound (calibrated exact on the XLA:CPU
+    smoke programs):
+
+      * collective-permute: the replicated `xbuf`'s live-row slice enters
+        shard_map row-sharded, and the partitioner stages that reshard as a
+        permute chain instead of a local slice — bounded by ONE full copy
+        of the live xbuf rows (`capacity * d_model * dtype_bytes`).
+      * all-reduce (model axis == 1 only): the vocab-parallel argmax's
+        pmax/pmin legalize to degenerate single-device-group all-reduces —
+        two 4-byte scalars per local row, zero actual link traffic. With a
+        real model axis the all-reduce bytes are intrinsic and must match
+        the prediction exactly, so no slack.
+
+    The audit gate is `predicted <= measured <= predicted + slack` per op.
+    """
+    sizes = dict(mesh_axes)
+    n_dev = 1
+    for s in sizes.values():
+        n_dev *= s
+    rows_group = (capacity // n_dev) * sizes.get("model", 1)
+    slack = {"collective-permute":
+             float(capacity * cfg.d_model * dtype_bytes)}
+    if sizes.get("model", 1) == 1:
+        slack["all-reduce"] = float(2 * 4 * rows_group)
+    return slack

@@ -30,6 +30,10 @@ _RING_FACTOR = {
     "collective-permute": 1.0,
 }
 
+#: public alias — `roofline.analysis` prices its analytic collective
+#: predictions with the same per-op ring factors this parser applies
+RING_FACTOR = _RING_FACTOR
+
 _COLL_RE = re.compile(
     r"=\s*(?:\(?)([a-z0-9]+)\[([\d,]*)\][^=]*?\s"
     r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"

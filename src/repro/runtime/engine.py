@@ -9,7 +9,6 @@ against the Table-2 analytics.
 """
 from __future__ import annotations
 
-import functools
 import threading
 import time
 from typing import List, Optional, Sequence
@@ -30,21 +29,47 @@ from repro.runtime.transport import channel_pair
 from repro.split import protocol
 
 
-@functools.lru_cache(maxsize=32)
+#: cross-run cache of jitted serving step pairs — an explicit dict, not an
+#: `functools.lru_cache`: the cached jit wrappers pin compiled executables
+#: AND their device buffers (per-device under a sharded arena), and an
+#: unbounded-lifetime decorator cache gave no way to release them short of
+#: killing the process. `clear_serving_steps()` is the shutdown hook.
+_STEP_CACHE: dict = {}
+
+
 def _serving_steps(cfg: ArchConfig, rt: Runtime, cut: int, dtype_name: str,
-                   backend: Optional[str]):
+                   backend: Optional[str], mesh=None):
     """Cross-run cache of the server's jitted step pair.
 
     jit compile caches live on the wrapped callable, so handing every
     `run_streaming` call the same pair (keyed by the hashable frozen
-    configs) means a benchmark sweep compiles each (meta, bucket) program
-    once per process instead of once per run — the repeated-run gate used
-    to re-pay the whole warm loop every repetition. Arena shapes (capacity)
-    may differ between runs; the jit object retraces per shape and keeps
-    both programs."""
-    top = steps.make_arena_top_step(cfg, rt, cut)
-    return jit_serving_steps(top, dtype=jnp.dtype(dtype_name),
-                             backend=backend)
+    configs + mesh) means a benchmark sweep compiles each (meta, bucket)
+    program once per process instead of once per run — the repeated-run
+    gate used to re-pay the whole warm loop every repetition. Arena shapes
+    (capacity) may differ between runs; the jit object retraces per shape
+    and keeps both programs."""
+    key = (cfg, rt, cut, dtype_name, backend, mesh)
+    pair = _STEP_CACHE.get(key)
+    if pair is None:
+        top = steps.make_arena_top_step(cfg, rt, cut, mesh=mesh)
+        pair = _STEP_CACHE[key] = jit_serving_steps(
+            top, dtype=jnp.dtype(dtype_name), backend=backend)
+    return pair
+
+
+def clear_serving_steps() -> int:
+    """Engine shutdown: drop every cached serving-step pair and the
+    compiled executables + device buffers they pin (`jit.clear_cache()`).
+    Returns the number of entries released. Long-lived hosts (benchmark
+    sweeps over many meshes, embedding servers) call this between
+    configurations; within one configuration, keeping the cache warm is
+    the whole point of `_serving_steps`."""
+    n = len(_STEP_CACHE)
+    for top, fused in _STEP_CACHE.values():
+        top.clear_cache()
+        fused.clear_cache()
+    _STEP_CACHE.clear()
+    return n
 
 
 def _client_compressors(cfg: ArchConfig, n_clients: int,
@@ -65,7 +90,9 @@ def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
                   max_wait: float = 0.01, compressor_mix=None, seed: int = 0,
                   params=None, wrap_endpoint=None,
                   retry_timeout: Optional[float] = None,
-                  max_retries: int = 16, tracer=None) -> dict:
+                  max_retries: int = 16, tracer=None, mesh=None,
+                  capacity: Optional[int] = None,
+                  release_steps: bool = False) -> dict:
     """Serve `n_clients` concurrent sessions of `prompt_len + gen` tokens.
 
     Returns a dict with the generated tokens `(n_clients, gen)`, per-session
@@ -83,6 +110,15 @@ def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
     `tracer` (an `obs.trace.Tracer`, default off) records the frame
     lifecycle of every session; `launch/serve.py --trace` exports it as
     Perfetto-loadable Chrome-trace JSON.
+
+    `mesh` (a `jax.sharding.Mesh`) shards the server's arena and runs the
+    top step under `shard_map` (docs/sharding.md); tokens are bit-identical
+    to `mesh=None` at any shape. `capacity` caps concurrently-RESIDENT
+    sessions (default: `n_clients`, so eviction never triggers); setting it
+    below `n_clients` exercises the LRU evict-to-host / re-admission path.
+    `release_steps` drops the cross-run step cache on exit
+    (`clear_serving_steps`) — for sweeps that never revisit a
+    configuration.
     """
     rt = Runtime(mesh=None, training=False)
     # the label owner may serve from a quantized KV arena (int8 codes +
@@ -113,10 +149,11 @@ def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
     server = StreamingServer(params, None, make_top_cache,
                              max_batch=max_batch,
                              max_wait=max_wait, dtype=cfg.adtype(),
-                             capacity=n_clients,
+                             capacity=capacity or n_clients,
                              x_shape=(1, 1, cfg.d_model),
                              jit_steps=_serving_steps(
-                                 cfg, rt_top, cut, cfg.dtype, None),
+                                 cfg, rt_top, cut, cfg.dtype, None, mesh),
+                             mesh=mesh,
                              tracer=tracer, registry=registry)
     server.expected_sessions = n_clients
 
@@ -171,7 +208,9 @@ def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
         raise RuntimeError(f"client sessions failed: {errs}") from errs[0][1]
 
     tokens = np.asarray([c.generated for c in clients], np.int32)
-    return {
+    if release_steps:
+        clear_serving_steps()
+    result = {
         "tokens": tokens,
         "client_stats": [c.stats.as_dict() for c in clients],
         "server_stats": [server.sessions[c.id].stats.as_dict()
@@ -197,6 +236,7 @@ def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
         "max_batch": max_batch,
         "cut_layer": cut,
     }
+    return result
 
 
 def fault_summary(server, clients) -> dict:

@@ -36,9 +36,10 @@ without re-running the top-model step, so a KV cache never double-advances.
 """
 from __future__ import annotations
 
+import collections
 import threading
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,6 +57,14 @@ from repro.runtime.batching import BatchingQueue
 from repro.runtime.session import Session
 from repro.split import protocol
 from repro.testing.clock import Clock, SYSTEM_CLOCK
+
+#: `Session.host_state` between the LRU-eviction decision (reader thread,
+#: under the server lock) and the serve loop's fetch of the row to host —
+#: marks "evicted, state still on device". A frame arriving in that window
+#: re-admits the session; FIFO ordering of the arena-op queue guarantees
+#: the fetch runs before the restore, so the restore always writes real
+#: host state.
+_EVICTING = object()
 
 
 def jit_serving_steps(top_step: Callable, *, dtype,
@@ -92,6 +101,10 @@ class FrameServerBase:
         self.queue = queue
         self.sessions: Dict[int, Session] = {}
         self._lock = threading.Lock()
+        # admissions blocked on a full arena wait here; notified on session
+        # close and after every flush's pending-frame drain (both can make
+        # a slot reclaimable/evictable)
+        self._slot_cv = threading.Condition(self._lock)
         self._readers: List[threading.Thread] = []
         self._open_readers = 0
         self.errors: List[BaseException] = []   # reader-thread failures
@@ -127,6 +140,12 @@ class FrameServerBase:
 
     def _new_session(self, sid: int, endpoint) -> Session:
         raise NotImplementedError
+
+    def _before_enqueue(self, sess: Session) -> None:
+        """Hook run after a payload frame is accepted, before it enters the
+        batching queue. The serving subclass pins the session's device
+        residency and bumps its in-flight frame count here; the training
+        server needs neither."""
 
     def _count_frame_up(self, sess: Session, frame) -> None:
         """Byte accounting for one accepted uplink frame: the session's
@@ -198,6 +217,7 @@ class FrameServerBase:
                     with self._lock:
                         if frame.session in self.sessions:
                             self.sessions[frame.session].closed = True
+                        self._slot_cv.notify_all()
                     return
                 if frame.kind == wire.FRAME_ERROR:
                     return              # peer abandoned this connection
@@ -208,6 +228,7 @@ class FrameServerBase:
                 sid_seen = frame.session
                 sess = self._session_for(frame.session, endpoint)
                 self._count_frame_up(sess, frame)
+                self._before_enqueue(sess)
                 try:
                     self.queue.put((sess, frame))
                 except RuntimeError:
@@ -260,6 +281,7 @@ class FrameServerBase:
                 with self._lock:
                     if frame.session in self.sessions:
                         self.sessions[frame.session].closed = True
+                    self._slot_cv.notify_all()
                 return "closed", sid_seen
             if frame.kind == wire.FRAME_ERROR:
                 return "retired", sid_seen      # peer abandoned this conn
@@ -272,6 +294,7 @@ class FrameServerBase:
             sid_seen = frame.session
             sess = self._session_for(frame.session, endpoint)
             self._count_frame_up(sess, frame)
+            self._before_enqueue(sess)
             self.queue.put((sess, frame))       # QueueFull surfaces to caller
             self._note_enqueue(sess, frame)
 
@@ -289,11 +312,16 @@ class FrameServerBase:
 class StreamingServer(FrameServerBase):
     """Top-model serving engine over framed byte channels.
 
-    `top_step` must be an arena-shaped step (`steps.make_arena_top_step`):
-    it is jitted here with the arena cache DONATED, so every flush updates
-    the slot arrays in place. `capacity` bounds concurrently-open sessions
-    (a closed session's slot is reclaimed for the next admission); the
-    engine sets it to the expected client count.
+    `top_step` must be an arena-shaped step (`steps.make_arena_top_step`,
+    built with the same `mesh` passed here): it is jitted with the arena
+    cache DONATED, so every flush updates the slot arrays in place.
+    `capacity` bounds concurrently-RESIDENT sessions; admission beyond it
+    reclaims a closed session's slot, then (with `evict_idle`) LRU-evicts
+    an idle session's row to host — the evicted session re-admits
+    transparently on its next frame — and only blocks/raises
+    (`admit_timeout`) when every slot holds an in-flight session. The
+    engine sets `capacity` to the expected concurrent client count, at
+    which point neither eviction nor blocking ever triggers.
     """
 
     def __init__(self, params, top_step: Optional[Callable],
@@ -302,6 +330,8 @@ class StreamingServer(FrameServerBase):
                  dtype=jnp.float32, capacity: Optional[int] = None,
                  x_shape=None, backend: Optional[str] = None,
                  jit_steps=None, clock: Clock = SYSTEM_CLOCK,
+                 mesh=None, evict_idle: bool = True,
+                 admit_timeout: float = 5.0,
                  tracer=NULL_TRACER,
                  registry: Optional[MetricsRegistry] = None):
         self.params = params
@@ -327,11 +357,24 @@ class StreamingServer(FrameServerBase):
         self.arena: Optional[SlotArena] = None
         self._make_cache = make_cache
         self._capacity = capacity or max_batch
+        self._mesh = mesh
+        self.evict_idle = evict_idle
+        self.admit_timeout = admit_timeout
         if x_shape is not None:             # else: built lazily from the
             self.arena = SlotArena(make_cache, self._capacity, x_shape,
-                                   dtype)    # first payload's meta.d
-        self._free_slots: List[int] = list(range(self._capacity))
-        self._pending_resets: List[int] = []    # applied by the serve loop
+                                   dtype, mesh=mesh)  # first payload's meta.d
+        # FIFO free deque: O(1) admission (the old list.pop(0) was
+        # O(capacity)) and freed slots cycle to the BACK, so slot reuse
+        # walks every row instead of hammering the coldest id — a
+        # reuse-after-close bug now surfaces within `capacity` admissions
+        self._free_slots: Deque[int] = collections.deque(
+            range(self._capacity))
+        # ordered arena mutations ("reset" | "fetch" | "restore"), applied
+        # by the serve loop before the next flush touches the arena — every
+        # row write is serialized with the donated step, and FIFO order
+        # guarantees an eviction's fetch lands before any re-admission's
+        # restore of the same session
+        self._arena_ops: List[Tuple] = []
         # flush-size buckets: powers of two up to max_batch (plus max_batch
         # itself when it is not one) — each (meta, bucket) decode/fused
         # program compiles once, and ragged fills pad < 2x
@@ -344,35 +387,146 @@ class StreamingServer(FrameServerBase):
     def _ensure_arena(self, d: int) -> None:
         if self.arena is None:
             self.arena = SlotArena(self._make_cache, self._capacity,
-                                   (1, 1, d), self.dtype)
+                                   (1, 1, d), self.dtype, mesh=self._mesh)
+
+    # -- slot lifecycle (admission / reclaim / evict / re-admit) -------------
+
+    def _push_free(self, slot: int) -> None:
+        """Freed slots go to the BACK of the deque (cycling; see __init__)."""
+        self._free_slots.append(slot)
+
+    def compact_free_slots(self) -> None:
+        """Free-list compaction: restore ascending issue order. The serve
+        loop runs this whenever the arena goes fully idle, so a long-lived
+        server's slot ids don't drift into a permanently shuffled order
+        (admission bursts then fill rows — and mesh row shards — from the
+        bottom up instead of in historical close order)."""
+        with self._lock:
+            self._free_slots = collections.deque(sorted(self._free_slots))
+
+    def _assign_slot_locked(self, sid: int) -> int:
+        """Take a free slot, else reclaim a closed session's, else
+        LRU-evict an idle session's row to host, else block on the slot
+        condvar until `admit_timeout` (through `self.clock`, so a
+        VirtualClock run degrades to an immediate arena-full error instead
+        of deadlocking a single-threaded pump). Called under `self._lock`;
+        the wait releases it."""
+        deadline = None
+        while True:
+            if self._free_slots:
+                return self._free_slots.popleft()
+            for sess in self.sessions.values():
+                # reclaim a closed session's slot; the template reset is
+                # applied by the serve loop (never raced with the step)
+                if sess.closed and sess.slot >= 0:
+                    slot, sess.slot = sess.slot, -1
+                    self._arena_ops.append(("reset", None, slot))
+                    self.registry.counter("slot_reclaims_total").inc()
+                    self.tracer.instant(EVT_SLOT_EVICT, tid=SERVE_TID,
+                                        sid=sess.id, slot=slot)
+                    return slot
+            if self.evict_idle:
+                cand = None
+                for sess in self.sessions.values():
+                    # evictable = resident, idle, and fully materialized:
+                    # `host_state is not None` means a fetch or restore for
+                    # this session is still queued/in flight — re-evicting
+                    # now would stamp the sentinel over real saved state
+                    # and lose the row (the serve loop clears host_state
+                    # when the restore lands)
+                    if (sess.slot >= 0 and not sess.closed
+                            and sess.pending == 0
+                            and sess.host_state is None
+                            and sess.id != sid
+                            and (cand is None
+                                 or sess.last_active < cand.last_active)):
+                        cand = sess
+                if cand is not None:
+                    # LRU eviction: the row moves to host (serve loop runs
+                    # the fetch before anything overwrites the row), and
+                    # the session re-admits on its next frame
+                    slot, cand.slot = cand.slot, -1
+                    cand.host_state = _EVICTING
+                    self._arena_ops.append(("fetch", cand, slot))
+                    self._arena_ops.append(("reset", None, slot))
+                    self.registry.counter("slot_evictions_total").inc()
+                    self.tracer.instant(EVT_SLOT_EVICT, tid=SERVE_TID,
+                                        sid=cand.id, slot=slot)
+                    return slot
+            now = self.clock.monotonic()
+            if deadline is None:
+                deadline = now + self.admit_timeout
+            if now >= deadline:
+                raise RuntimeError(
+                    f"session {sid}: arena full ({self._capacity} slots, "
+                    f"none closed or idle within {self.admit_timeout:.1f}s)"
+                    f" — raise `capacity` toward the expected concurrent "
+                    f"session count")
+            self.clock.cv_wait(self._slot_cv, deadline - now)
+
+    def _ensure_resident(self, sess: Session) -> None:
+        """Re-admit an evicted session (under `self._lock`): assign a row
+        (possibly evicting another idle session) and queue the restore —
+        FIFO-after its own eviction's fetch, so the serve loop always
+        writes back real host state. The restored row carries the exact
+        pre-eviction KV/position, and the untouched `last_seq`/`last_reply`
+        ARQ state keeps dedup working across the gap: a retransmit of the
+        last pre-eviction frame is re-acked from the cached reply, never
+        re-stepped — an evicted-then-readmitted cache cannot double-advance.
+        """
+        if sess.slot >= 0 or sess.closed or sess.host_state is None:
+            return
+        slot = self._assign_slot_locked(sess.id)
+        sess.slot = slot
+        self._arena_ops.append(("restore", sess, slot))
+        self.registry.counter("slot_readmissions_total").inc()
+        self.tracer.instant(EVT_SLOT_ADMIT, tid=SERVE_TID, sid=sess.id,
+                            slot=slot)
+
+    def _before_enqueue(self, sess: Session) -> None:
+        """Serving-side enqueue hook: pin residency for the frame about to
+        enter the queue and count it in flight — `pending > 0` makes the
+        session ineligible for eviction until the flush that serves the
+        frame drains it."""
+        with self._lock:
+            self._ensure_resident(sess)
+            sess.pending += 1
+            sess.last_active = self.clock.monotonic()
 
     def _new_session(self, sid: int, endpoint) -> Session:
         # called under self._lock (from _session_for)
-        if self._free_slots:
-            slot = self._free_slots.pop(0)
-        else:
-            # reclaim the slot of a closed session; the reset is applied by
-            # the serve loop (never raced against the donated step)
-            slot = None
-            for sess in self.sessions.values():
-                if sess.closed and sess.slot >= 0:
-                    slot, sess.slot = sess.slot, -1
-                    self._pending_resets.append(slot)
-                    self.registry.counter("slot_evictions_total").inc()
-                    self.tracer.instant(EVT_SLOT_EVICT, tid=SERVE_TID,
-                                        sid=sess.id, slot=slot)
-                    break
-            if slot is None:
-                raise RuntimeError(
-                    f"session {sid}: arena full ({self._capacity} slots, "
-                    f"none closed) — raise `capacity` to the expected "
-                    f"session count")
+        slot = self._assign_slot_locked(sid)
         self.registry.counter("slot_admits_total").inc()
         self.tracer.instant(EVT_SLOT_ADMIT, tid=SERVE_TID, sid=sid,
                             slot=slot)
         if self.tracer.enabled:
             self.tracer.name_track(session_tid(sid), f"session {sid}")
-        return Session(id=sid, slot=slot, endpoint=endpoint)
+        return Session(id=sid, slot=slot, endpoint=endpoint,
+                       last_active=self.clock.monotonic())
+
+    def _apply_arena_ops(self, ops) -> None:
+        """Run queued row mutations (eviction fetches, template resets,
+        re-admission restores) on the serve-loop thread, in FIFO order,
+        before the flush's step touches the arena. With no arena yet (no
+        payload has sized it), no row was ever written: a fetch degrades
+        to a fresh template and reset/restore are no-ops."""
+        for kind, sess, slot in ops:
+            if self.arena is None:
+                if kind == "fetch":
+                    sess.host_state = self._make_cache()
+                elif kind == "restore":
+                    sess.host_state = None
+                continue
+            if kind == "fetch":
+                sess.host_state = self.arena.fetch_slot(slot)
+            elif kind == "restore":
+                state = sess.host_state
+                assert state is not None and state is not _EVICTING, \
+                    "restore ordered before its eviction's fetch"
+                self.arena.restore_slot(slot, state)
+                sess.host_state = None
+            else:
+                self.arena.reset_slot(slot)
 
     # -- serving -------------------------------------------------------------
 
@@ -503,9 +657,31 @@ class StreamingServer(FrameServerBase):
                                      tid=session_tid(sess.id), sid=sess.id,
                                      seq=frame.seq)
         self._m_depth.set(len(self.queue))
+        all_items = items
         items = self._dedup(items)
         with self._lock:
-            resets, self._pending_resets = self._pending_resets, []
+            # drain the in-flight count for EVERY frame this flush picked
+            # up (dedup-dropped replays included — they were enqueued too)
+            # and stamp activity for the LRU eviction order
+            for sess, _frame in all_items:
+                sess.pending -= 1
+                sess.last_active = t_flush
+            # eager slot release: a closed session's row returns to the
+            # free deque now, not at the next full-arena admission scan
+            for sess in self.sessions.values():
+                if sess.closed and sess.slot >= 0:
+                    slot, sess.slot = sess.slot, -1
+                    self._arena_ops.append(("reset", None, slot))
+                    self._push_free(slot)
+                    self.registry.counter("slot_reclaims_total").inc()
+                    self.tracer.instant(EVT_SLOT_EVICT, tid=SERVE_TID,
+                                        sid=sess.id, slot=slot)
+            if len(self._free_slots) == self._capacity:
+                # fully idle: compact the free list back to issue order
+                self._free_slots = collections.deque(
+                    sorted(self._free_slots))
+            ops, self._arena_ops = self._arena_ops, []
+            self._slot_cv.notify_all()
             # a reclaimed slot means the session closed; any straggler
             # frame has no device state left and is dropped. The slot is
             # SNAPSHOTTED under the same lock: a reader thread admitting a
@@ -515,9 +691,7 @@ class StreamingServer(FrameServerBase):
             items = [(s, f, s.slot) for s, f in items if s.slot >= 0]
         if items:
             self._ensure_arena(items[0][1].payload.meta.d)
-        if self.arena is not None:
-            for slot in resets:             # serialized with the step here
-                self.arena.reset_slot(slot)
+        self._apply_arena_ops(ops)      # serialized with the step here
         if not items:
             return
         self.batch_sizes.append(len(items))
@@ -538,8 +712,8 @@ class StreamingServer(FrameServerBase):
             [(meta, idxs)] = by_meta.items()
             stacked, slots = self._stack_group(
                 meta, [items[i][1].payload for i in idxs],
-                np.fromiter((items[i][2] for i in idxs), np.int64,
-                            len(idxs)),
+                np.fromiter((self.arena.wire_row(items[i][2])
+                             for i in idxs), np.int64, len(idxs)),
                 self._bucket(len(idxs)))
             if trace:
                 ts1 = self.clock.monotonic()
@@ -553,8 +727,8 @@ class StreamingServer(FrameServerBase):
             for meta, idxs in by_meta.items():
                 self._decode_group(
                     meta, [items[i][1].payload for i in idxs],
-                    np.fromiter((items[i][2] for i in idxs), np.int64,
-                                len(idxs)))
+                    np.fromiter((self.arena.wire_row(items[i][2])
+                                 for i in idxs), np.int64, len(idxs)))
             if trace:
                 ts1 = self.clock.monotonic()
             t1 = time.perf_counter()
@@ -566,8 +740,11 @@ class StreamingServer(FrameServerBase):
             ts2 = self.clock.monotonic()
         t2 = time.perf_counter()
         for sess, frame, slot in items:
+            # with a pod axis, the token row returned on the inverse ring
+            # to the slot's ingestion block (SlotArena.wire_row; identity
+            # otherwise)
             reply = wire.encode_token_frame(sess.id, frame.seq,
-                                            tokens[slot])
+                                            tokens[self.arena.wire_row(slot)])
             sess.last_seq, sess.last_reply = frame.seq, reply
             sess.endpoint.send(reply)
             self._count_frame_down(sess, len(reply))

@@ -95,6 +95,16 @@ class Session:
     #                                     connection — updated on reconnect)
     stats: SessionStats = dataclasses.field(default_factory=SessionStats)
     closed: bool = False
+    # slot-lifecycle state (docs/sharding.md): `pending` counts frames
+    # enqueued but not yet processed — a session is only LRU-evictable at
+    # pending == 0, so an in-flight frame can never lose its device row;
+    # `last_active` is the serve-clock time of admission / last processed
+    # frame (the LRU key); `host_state` holds the evicted KV row on host
+    # (None while resident; the server's _EVICTING sentinel between the
+    # eviction decision and the serve loop's fetch)
+    pending: int = 0
+    last_active: float = 0.0
+    host_state: Any = None
     # stop-and-wait ARQ state: the highest seq processed and its cached
     # reply bytes, so a replayed frame is re-acked instead of re-processed
     # (re-processing would double-advance the KV cache / top optimizer)

@@ -76,7 +76,8 @@ def make_top_step(cfg: ArchConfig, rt: Runtime, cut: int) -> Callable:
     return jax.vmap(one_session, in_axes=(None, 0, 0))
 
 
-def make_arena_top_step(cfg: ArchConfig, rt: Runtime, cut: int) -> Callable:
+def make_arena_top_step(cfg: ArchConfig, rt: Runtime, cut: int,
+                        mesh=None) -> Callable:
     """Whole-arena server step with an active-slot mask.
 
     (params, xbuf (C+1, 1, 1, d), cache arena stacked over C, active (C,)
@@ -90,6 +91,13 @@ def make_arena_top_step(cfg: ArchConfig, rt: Runtime, cut: int) -> Callable:
 
     Per-row numerics are identical to `make_top_step` (same vmapped body),
     so arena-served tokens are bit-identical to the flush-stacked path.
+
+    With `mesh` (a `jax.sharding.Mesh`), the step runs under `shard_map`
+    with arena rows sharded over every mesh axis and the lm head
+    vocab-parallel over 'model' — served tokens stay bit-identical to the
+    mesh-less path at any mesh shape (docs/sharding.md gives the
+    exactness argument). `mesh=None` is exactly the pre-mesh single-device
+    program.
     """
 
     def one_session(params, x, cache, active):
@@ -103,8 +111,121 @@ def make_arena_top_step(cfg: ArchConfig, rt: Runtime, cut: int) -> Callable:
 
     vstep = jax.vmap(one_session, in_axes=(None, 0, 0, 0))
 
+    if mesh is None:
+        def arena_step(params, xbuf, cache, active):
+            return vstep(params, xbuf[: active.shape[0]], cache, active)
+
+        return arena_step
+    return _make_sharded_arena_step(cfg, rt, cut, mesh)
+
+
+def _make_sharded_arena_step(cfg: ArchConfig, rt: Runtime, cut: int,
+                             mesh) -> Callable:
+    """The `shard_map` variant of the arena step (docs/sharding.md).
+
+    Decomposition, chosen so every piece preserves bit-exact tokens:
+
+      * arena rows (slots) shard over ALL mesh axes flattened in mesh
+        order — 'pod' x 'data' x 'model' — so session capacity scales
+        with every device. Row sharding is batch decomposition: each
+        device runs the same per-row program `make_arena_top_step` vmaps,
+        no contraction is split, numerics are untouched.
+      * the lm head is tensor-parallel over 'model': each rank first
+        all-gathers its row block along 'model' (`tp.gather_seq_local`'s
+        collective, norm applied BEFORE the gather in Megatron-SP order),
+        then multiplies by its vocab shard of `unembed` — an output-dim
+        split, NOT a contraction split, so each logit column is
+        bit-identical to the replicated matmul — and the greedy token
+        comes out of `tp.vocab_parallel_argmax` (exact first-occurrence
+        argmax from two scalar-per-row collectives).
+      * with a 'pod' axis, the cut activation crosses the pod ring
+        (`protocol.pod_ring_perm`) before the top half runs and the token
+        rows return on the inverse ring — the serving-side instance of
+        the `split.protocol` ppermute cut boundary. Host-side, `xbuf` and
+        token rows for slot s live at `SlotArena.wire_row(s)` (the
+        ingestion pod's block); cache rows stay slot-aligned.
+
+    The reduce-scatter output projection (`tp.out_proj_rs`) stays OFF this
+    path by design: it splits the ff contraction, which reorders f32
+    summation and breaks the bit-exact serving contract (see
+    docs/sharding.md); it serves the training/prefill pipeline.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.models import common, tp
+
+    axes = tuple(mesh.axis_names)
+    sizes = dict(mesh.shape)
+    n_model = sizes.get("model", 1)
+    n_pod = sizes.get("pod", 1)
+    n_rows_shards = 1
+    for a in axes:
+        n_rows_shards *= sizes[a]
+    if cfg.padded_vocab % max(n_model, 1):
+        raise ValueError(
+            f"padded vocab {cfg.padded_vocab} not divisible by model axis "
+            f"{n_model}")
+
+    def one_session_hidden(params, x, cache, active):
+        """Per-row top-layer pass, token head split out (it needs the
+        cross-rank collectives). Cache update identical to `one_session`."""
+        x, partial = transformer.decode_layers(params, cfg, rt, x, cache,
+                                               cut, cfg.n_layers)
+        new = _merge_range(cache, partial, prefix=False)
+        new = jax.tree.map(lambda n, o: jnp.where(active, n, o), new, cache)
+        return x, new
+
+    vhidden = jax.vmap(one_session_hidden, in_axes=(None, 0, 0, 0))
+
+    def body(params, x, cache, active):
+        if n_pod > 1:
+            # cut-boundary crossing: the ingestion pod hands its row block
+            # to the pod holding those slots' top-model state
+            from repro.split import protocol
+            x = jax.lax.ppermute(x, "pod", protocol.pod_ring_perm(n_pod))
+        h, new_cache = vhidden(params, x, cache, active)
+        h = common.apply_norm(h, params["final_norm"], cfg.norm)
+        if n_model > 1:
+            # reassemble the (pod, data) row block from the model ranks —
+            # the Megatron-SP gather (norm first, gather in activation
+            # dtype), rows standing in for the sequence axis
+            h = tp.gather_seq_local(h.reshape(1, h.shape[0], -1)
+                                    ).reshape(-1, *h.shape[1:])
+        logits = h @ params["unembed"].astype(h.dtype)   # local vocab shard
+        tok = tp.vocab_parallel_argmax(logits[:, :, -1, :], "model")
+        if n_pod > 1:
+            from repro.split import protocol
+            tok = jax.lax.ppermute(
+                tok, "pod", protocol.pod_ring_perm(n_pod, inverse=True))
+        return tok, new_cache
+
+    rows = axes if len(axes) > 1 else axes[0]
+
+    def row_spec(a):
+        return P(rows, *([None] * (a.ndim - 1)))
+
+    # tokens replicate over 'model' (every rank holds its gathered row
+    # block's tokens) and shard over the remaining row axes
+    tok_axes = tuple(a for a in axes if a != "model")
+    tok_spec = P(tok_axes if len(tok_axes) != 1 else tok_axes[0], None) \
+        if tok_axes else P(None, None)
+
     def arena_step(params, xbuf, cache, active):
-        return vstep(params, xbuf[: active.shape[0]], cache, active)
+        if active.shape[0] % n_rows_shards:
+            raise ValueError(
+                f"arena capacity {active.shape[0]} not divisible by the "
+                f"{n_rows_shards}-way row sharding (SlotArena pads for "
+                f"this)")
+        pspec = jax.tree.map(lambda _: P(), params)
+        pspec["unembed"] = P(None, "model")
+        cspec = jax.tree.map(row_spec, cache)
+        x = xbuf[: active.shape[0]]
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(pspec, row_spec(x), cspec, row_spec(active)),
+            out_specs=(tok_spec, cspec),
+            check_vma=False)(params, x, cache, active)
 
     return arena_step
 

@@ -49,6 +49,18 @@ def make_cut_compressor(sc: SplitConfig) -> compressors.Compressor:
     return compressors.make_compressor(sc.compressor, **kw)
 
 
+def pod_ring_perm(n_pod: int, *, inverse: bool = False):
+    """The cut-boundary ring permutation along the 'pod' axis.
+
+    Forward sends pod i's leaves to pod i+1 (mod n); inverse returns them.
+    Shared by `_pod_permute` (the in-graph training transfer) and the
+    sharded serving step (`runtime.steps.make_arena_top_step` with a
+    pod-axis mesh), so both paths carry the identical collective schedule.
+    """
+    step = -1 if inverse else 1
+    return [(i, (i + step) % n_pod) for i in range(n_pod)]
+
+
 def _pod_permute(rt: Runtime, *leaves, inverse: bool = False):
     """ppermute every array along the pod axis (0 <-> 1).
 
@@ -58,9 +70,7 @@ def _pod_permute(rt: Runtime, *leaves, inverse: bool = False):
     mesh = rt.mesh
     if mesh is None or "pod" not in mesh.axis_names or mesh.shape["pod"] < 2:
         return leaves
-    n_pod = mesh.shape["pod"]
-    step = -1 if inverse else 1
-    perm = [(i, (i + step) % n_pod) for i in range(n_pod)]
+    perm = pod_ring_perm(mesh.shape["pod"], inverse=inverse)
 
     def spec_for(a):
         # batch axis is dim 0, sharded over (pod, data); rest replicated/model

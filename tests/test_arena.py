@@ -148,6 +148,7 @@ def _reference_tokens(cfg, params, comp, prompts, gen):
 @pytest.mark.parametrize("spec", ["identity", "size_reduction:k=8",
                                   "randtopk:k=8", "quant:bits=4",
                                   "randtopk_quant:k=8,bits=8"])
+@pytest.mark.slow
 def test_arena_tokens_match_host_densify_path(spec):
     """Slot-decoded, arena-stepped tokens are bit-identical to the old
     host-densify + stack/unstack serve loop, for every payload kind."""
@@ -168,6 +169,7 @@ def test_arena_tokens_match_host_densify_path(spec):
 # Zero host-side densification on the hot paths
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_streaming_serves_without_host_densify():
     """A full mixed-kind serving run performs ZERO host-side dense
     materializations (`protocol.server_decode` stays untouched) and keeps
@@ -217,6 +219,7 @@ def test_int8_kv_arena_cache_layout():
     assert kv["k_scale"].shape == kv["k"].shape[:-1]
 
 
+@pytest.mark.slow
 def test_int8_kv_arena_serving_accuracy_delta():
     """Serving with an int8 server-side KV arena stays within a pinned
     token-agreement margin of the f32 reference. The quantized run must
@@ -259,7 +262,7 @@ def test_slots_survive_reconnect_without_double_advance():
     np.testing.assert_array_equal(clean["tokens"], chaos["tokens"])
 
 
-def _server(capacity, max_batch=2):
+def _server(capacity, max_batch=2, **kw):
     cfg = _smoke_cfg(compressor="randtopk", k=8)
     params = transformer.init_model(jax.random.key(0), cfg)
     rt = Runtime(mesh=None, training=False)
@@ -267,7 +270,7 @@ def _server(capacity, max_batch=2):
     return StreamingServer(
         params, steps.make_arena_top_step(cfg, rt, 1), make_cache,
         max_batch=max_batch, capacity=capacity,
-        x_shape=(1, 1, cfg.d_model))
+        x_shape=(1, 1, cfg.d_model), **kw)
 
 
 def test_slot_reuse_after_close_resets_state():
@@ -281,18 +284,112 @@ def test_slot_reuse_after_close_resets_state():
     s1.closed = True
     s2 = server._session_for(22, endpoint=None)
     assert s2.slot == 0 and s1.slot == -1       # reclaimed, not duplicated
-    assert server._pending_resets == [0]
+    assert ("reset", None, 0) in server._arena_ops
     server._process([])                          # serve loop applies resets
-    assert server._pending_resets == []
+    assert server._arena_ops == []
     assert int(np.asarray(server.arena.cache["pos"])[0]) == 0
 
 
 def test_arena_full_raises_at_admission():
-    server = _server(capacity=2)
+    # eviction off and a zero admission timeout: the third admission has
+    # no free, closed, or evictable slot and must fail loudly
+    server = _server(capacity=2, evict_idle=False, admit_timeout=0.0)
     server._session_for(1, endpoint=None)
     server._session_for(2, endpoint=None)
     with pytest.raises(RuntimeError, match="arena full"):
         server._session_for(3, endpoint=None)
+
+
+def test_full_arena_evicts_lru_idle_session():
+    """With eviction on, a full arena LRU-evicts the idlest session's row
+    to host (the serve loop fetches it before the row is reused) and a
+    later frame from the evicted session re-admits it with its exact
+    pre-eviction state."""
+    server = _server(capacity=2)
+    ev0 = server.registry.counter("slot_evictions_total").value
+    re0 = server.registry.counter("slot_readmissions_total").value
+    s1 = server._session_for(1, endpoint=None)
+    s2 = server._session_for(2, endpoint=None)
+    s1.last_active, s2.last_active = 1.0, 2.0           # s1 is the LRU
+    # simulate served progress so eviction has real state to preserve
+    server.arena.cache["pos"] = server.arena.cache["pos"].at[0].set(5)
+    s3 = server._session_for(3, endpoint=None)
+    assert s3.slot == 0 and s1.slot == -1               # s1 evicted
+    assert s1.host_state is not None                    # sentinel until fetch
+    server._process([])                 # serve loop: fetch -> reset
+    assert int(np.asarray(s1.host_state["pos"])) == 5   # state reached host
+    assert int(np.asarray(server.arena.cache["pos"])[0]) == 0   # row reset
+    assert server.registry.counter("slot_evictions_total").value == ev0 + 1
+    # s2 closes; s1's re-admission restores its row into the freed slot
+    s2.closed = True
+    with server._lock:
+        server._ensure_resident(s1)
+    assert s1.slot >= 0
+    server._process([])                 # serve loop: restore
+    assert s1.host_state is None
+    assert int(np.asarray(server.arena.cache["pos"])[s1.slot]) == 5
+    assert server.registry.counter("slot_readmissions_total").value == re0 + 1
+
+
+def test_slot_churn_cycles_and_resets_every_row():
+    """Admit/close/admit N >> capacity: the FIFO free deque cycles slot
+    reuse through EVERY row (the old `list.pop(0)` + append re-issued the
+    coldest id, hiding reuse-after-close bugs), each reused row is
+    template-reset exactly when reused, and rows holding live sessions are
+    never spuriously reset."""
+    cap = 3
+    server = _server(capacity=cap, evict_idle=False)
+    # pin one live session for the whole churn — its row must never reset
+    pinned = server._session_for(1000, endpoint=None)
+    server._process([])
+    server.arena.cache["pos"] = server.arena.cache["pos"].at[
+        pinned.slot].set(99)
+    issued = []
+    for i in range(10):                     # 10 admissions over 2 free rows
+        sess = server._session_for(i, endpoint=None)
+        server._process([])                 # serve loop applies the ops
+        pos = np.asarray(server.arena.cache["pos"])
+        assert pos[sess.slot] == 0, \
+            f"row {sess.slot} reused without a template reset"
+        issued.append(sess.slot)
+        server.arena.cache["pos"] = server.arena.cache["pos"].at[
+            sess.slot].set(i + 10)          # marker: this row served i
+        sess.closed = True
+    free_rows = sorted(set(range(cap)) - {pinned.slot})
+    # cycling: every window of len(free_rows) admissions touches them all
+    for w in range(len(issued) - len(free_rows) + 1):
+        assert sorted(set(issued[w:w + len(free_rows)])) == free_rows, \
+            f"slot reuse not cycling: {issued}"
+    assert int(np.asarray(server.arena.cache["pos"])[pinned.slot]) == 99
+
+
+@pytest.mark.slow
+def test_repeated_runs_do_not_grow_live_buffers():
+    """`engine._serving_steps` pins compiled programs ON PURPOSE (cross-run
+    warm cache) — but repeated `run_streaming` calls must not accumulate
+    device buffers beyond it, and `clear_serving_steps` must release the
+    cache on demand (the old unbounded `functools.lru_cache` could not)."""
+    import gc
+
+    from repro.runtime import engine
+
+    cfg = _smoke_cfg(compressor="randtopk", k=8)
+    params = transformer.init_model(jax.random.key(0), cfg)
+    kw = dict(n_clients=2, prompt_len=2, gen=3, max_batch=2, params=params)
+    run_streaming(cfg, **kw)        # populate the cache, pay every compile
+    gc.collect()
+    n0 = len(jax.live_arrays())
+    for _ in range(3):
+        run_streaming(cfg, **kw)
+    gc.collect()
+    n1 = len(jax.live_arrays())
+    assert n1 <= n0 + 8, f"live arrays grew {n0} -> {n1} across reruns"
+    assert len(engine._STEP_CACHE) >= 1
+    released = engine.clear_serving_steps()
+    assert released >= 1 and len(engine._STEP_CACHE) == 0
+    # the next run recompiles from an empty cache and still serves
+    run_streaming(cfg, **kw)
+    assert len(engine._STEP_CACHE) == 1
 
 
 def test_inactive_slots_do_not_advance():

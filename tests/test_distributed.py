@@ -72,6 +72,7 @@ def test_rwkv_chunk_matches_scan():
     np.testing.assert_allclose(np.asarray(Sc), np.asarray(Ss), atol=2e-5)
 
 
+@pytest.mark.slow
 def test_rwkv_decode_matches_full_sequence():
     """Token-by-token decode must agree with the full-sequence evaluation."""
     cfg = configs.get("rwkv6_1p6b", smoke=True)
@@ -92,6 +93,7 @@ def test_rwkv_decode_matches_full_sequence():
                                atol=2e-3, rtol=2e-3)
 
 
+@pytest.mark.slow
 def test_mamba_decode_matches_full_sequence():
     cfg = configs.get("zamba2_7b", smoke=True)
     rt = Runtime(mesh=None, training=False, ssm_chunk=8)
@@ -130,6 +132,7 @@ def test_attention_decode_matches_full_sequence():
                                atol=2e-3, rtol=2e-3)
 
 
+@pytest.mark.slow
 def test_sliding_window_masks_old_positions():
     cfg = configs.get("yi_6b", smoke=True).with_(sliding_window=4)
     rt = Runtime(mesh=None, training=False)
@@ -151,6 +154,7 @@ def test_sliding_window_masks_old_positions():
                                atol=2e-3, rtol=2e-3)
 
 
+@pytest.mark.slow
 def test_int8_kv_cache_decode_close_to_fp():
     import dataclasses
     cfg = configs.get("yi_6b", smoke=True)

@@ -137,6 +137,7 @@ def test_injector_reseeds_per_connection():
 # End-to-end chaos: the acceptance bar
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_streaming_survives_chaos_with_identical_tokens():
     cfg = configs.get("qwen3-8b", smoke=True).with_(
         split=SplitConfig(cut_layer=1, compressor="randtopk", k=16))
@@ -188,6 +189,7 @@ def test_fedtrain_survives_chaos_with_identical_losses():
     assert chaos["payload_bytes_up"] >= clean["payload_bytes_up"]
 
 
+@pytest.mark.slow
 def test_fedtrain_survives_corrupt_first_frame_heavy_chaos():
     """Regression: a corrupt FIRST frame retires the connection before the
     server ever created the session — the serve queue must stay open for

@@ -101,6 +101,7 @@ def test_checkpoint_resume_loss_parity(tmp_path):
     assert abs(resumed["mean_test_acc"] - full["mean_test_acc"]) < 1e-6
 
 
+@pytest.mark.slow
 def test_checkpoint_resume_multi_client_async(tmp_path):
     """The barrier snapshot is consistent for N clients under an async
     policy (stale gradients and schedule clocks checkpoint too)."""

@@ -28,6 +28,7 @@ def test_topk_kernel_matches_ref(shape, dtype):
 
 @given(st.integers(1, 63), st.integers(1, 7), st.integers(0, 1000))
 @settings(max_examples=15, deadline=None)
+@pytest.mark.slow
 def test_topk_kernel_property(k, rows, seed):
     x = jax.random.normal(jax.random.key(seed), (rows, 64))
     mask, _ = tk_kernel.topk_mask_threshold(x, k)

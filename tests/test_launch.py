@@ -21,6 +21,7 @@ def _run(code: str, device_count=8, timeout=900):
     return r.stdout
 
 
+@pytest.mark.slow
 def test_train_driver_loss_decreases(tmp_path):
     out = _run(f"""
         from repro.launch.train import main
@@ -40,6 +41,7 @@ def test_train_driver_loss_decreases(tmp_path):
     assert "LOSSES" in out
 
 
+@pytest.mark.slow
 def test_train_driver_restores_checkpoint(tmp_path):
     _run(f"""
         from repro.launch.train import main
@@ -58,6 +60,7 @@ def test_train_driver_restores_checkpoint(tmp_path):
     """, device_count=1)
 
 
+@pytest.mark.slow
 def test_serve_driver(capsys):
     _run("""
         import io, contextlib
@@ -71,6 +74,84 @@ def test_serve_driver(capsys):
         # measured bytes/client/token come from real frames now
         assert "B/client/token" in buf.getvalue(), buf.getvalue()
         print("SERVE OK")
+    """, device_count=1)
+
+
+def test_drivers_route_elapsed_time_through_clock():
+    """Regression for the raw `time.time()` reads the train/dryrun drivers
+    used to make: every elapsed-time print must go through the injectable
+    `Clock`, so a deterministic fake clock fully determines the logged
+    timings (and wall-clock noise can never leak into golden output)."""
+    _run(r"""
+        import io, contextlib, re
+        from repro.testing.clock import Clock
+
+        class TickingClock(Clock):
+            # +7.5s per monotonic() read: printed elapsed values become a
+            # pure function of how many times the driver consulted the clock
+            def __init__(self):
+                self.t = 100.0
+            def monotonic(self):
+                self.t += 7.5
+                return self.t
+            def sleep(self, seconds):
+                pass
+
+        from repro.launch.train import main as train_main
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            train_main(["--arch", "yi-6b", "--smoke", "--steps", "3",
+                        "--batch", "2", "--seq", "16", "--log-every", "1"],
+                       clock=TickingClock())
+        elapsed = re.findall(r"\((\d+\.\d)s\)", buf.getvalue())
+        assert elapsed == ["7.5", "15.0", "22.5"], elapsed
+        print("TRAIN CLOCK OK")
+
+        # dryrun: stub out the (heavyweight) lower/compile and mesh pieces;
+        # the compile-time report must read the injected clock, not time.time
+        import repro.launch.dryrun as dryrun
+
+        class FakeMem:
+            argument_size_in_bytes = output_size_in_bytes = 0
+            temp_size_in_bytes = alias_size_in_bytes = 0
+
+        class FakeCompiled:
+            def as_text(self):
+                return ""
+            def memory_analysis(self):
+                return FakeMem()
+
+        class FakeDevices:
+            size, shape = 1, (1,)
+
+        class FakeMesh:
+            devices = FakeDevices()
+
+        class FakeRoof:
+            mesh = "1"
+            def row(self):
+                return dict(hlo_flops=1.0, model_flops=1.0, useful_ratio=1.0,
+                            t_compute_s=0.0, t_memory_s=0.0,
+                            t_collective_s=0.0, bottleneck="compute",
+                            coll_detail={})
+
+        class FakeAnalysis:
+            @staticmethod
+            def model_flops(cfg, tokens, training):
+                return 1.0
+            @staticmethod
+            def from_compiled(*a, **k):
+                return FakeRoof()
+
+        dryrun.make_production_mesh = lambda **kw: FakeMesh()
+        dryrun.lower_one = lambda cfg, shape, mesh, runtime_kw=None: \
+            (FakeCompiled(), None)
+        dryrun.analysis = FakeAnalysis()
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            dryrun.run_combo("yi-6b", "train_4k", clock=TickingClock())
+        assert "(compile 7.5s)" in buf.getvalue(), buf.getvalue()
+        print("DRYRUN CLOCK OK")
     """, device_count=1)
 
 

@@ -428,6 +428,7 @@ def test_arrivals_deterministic_and_mmpp_alternates():
     assert all(x != y for x, y in zip(states, states[1:]))
 
 
+@pytest.mark.slow
 def test_report_deterministic_same_seed(smoke):
     cfg, params = smoke
     r1 = run_loadgen(cfg, _mini(3), params=params)
@@ -473,6 +474,7 @@ def test_admission_control_rejects_at_capacity(smoke):
     assert s["failed"] == 0             # rejection is clean, never an error
 
 
+@pytest.mark.slow
 def test_adaptive_fleet_beats_static_under_burst(smoke):
     """Mini version of the bench gate (benchmarks/loadgen.py): same seed,
     same MMPP burst — the QoS ladder must buy real p99 headroom by

@@ -267,6 +267,7 @@ def _trace_bytes(smoke, tmp_path, tag, **kw):
     return path.read_bytes(), report
 
 
+@pytest.mark.slow
 def test_loadgen_trace_bit_identical_clean(smoke, tmp_path):
     b1, r1 = _trace_bytes(smoke, tmp_path, "clean1")
     b2, r2 = _trace_bytes(smoke, tmp_path, "clean2")

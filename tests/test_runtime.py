@@ -237,6 +237,7 @@ def test_streaming_matches_local_decode():
         assert res["tokens"][row].tolist() == out
 
 
+@pytest.mark.slow
 def test_streaming_mixed_compressors_byte_accounting():
     """A dense + randtopk session mix: grouped batched decode, and both
     parties' accounting equals the frame sizes the codec predicts."""

@@ -20,6 +20,7 @@ def test_topk_mask_selects_exactly_k(k, rows, seed):
 
 @given(st.integers(1, 31), st.floats(0.0, 1.0), st.integers(0, 10_000))
 @settings(max_examples=40, deadline=None)
+@pytest.mark.slow
 def test_randtopk_mask_selects_exactly_k(k, alpha, seed):
     d = 32
     x = jax.random.normal(jax.random.key(seed), (3, d))
