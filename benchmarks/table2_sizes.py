@@ -20,7 +20,9 @@ def main(emit=print):
         np.random.RandomState(0).randn(n_inst, d).astype(np.float32))
     ok_all = True
     for method, kw in [("size_reduction", dict(k=3)), ("topk", dict(k=3)),
-                       ("randtopk", dict(k=3)), ("quant", dict(bits=4)),
+                       ("randtopk", dict(k=3)),
+                       ("randtopk_mask", dict(k=3)),
+                       ("quant", dict(bits=4)),
                        ("randtopk_quant", dict(k=3, bits=8)),
                        ("identity", {})]:
         row = wire.table2_row(method, d, **kw)

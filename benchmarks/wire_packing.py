@@ -1,12 +1,14 @@
 """Micro-benchmark: vectorized numpy bit packing vs the per-bit Python loop.
 
 `wire._pack_bits` / `_unpack_bits` used to walk every (value, bit) pair in
-Python; the vectorized pack builds a (n, width) bit matrix with one shift
-broadcast and defers to `np.packbits`, and the vectorized unpack assembles
-each value from two aligned uint64 words of the stream (no bit-matrix
-materialization at all). This bench keeps the historical per-bit
-implementations inline as the baseline, verifies byte-identical streams and
-value-identical unpacks in both directions, and reports both speedups.
+Python; both are now the two-aligned-word scheme (pack ORs each of 64
+lanes into its at most two aligned uint64 words, unpack assembles each
+value from two aligned words of the stream) — no (n, width) bit matrix is
+ever materialized in either direction. This bench keeps the historical
+per-bit implementations inline as the baseline, verifies byte-identical
+streams and value-identical unpacks in both directions (including the
+full-uint32 and full-uint64 widths the device mask/pack kernels lean on),
+and reports both speedups.
 
     PYTHONPATH=src python -m benchmarks.wire_packing
 """
@@ -54,8 +56,10 @@ def _time(fn, reps=5):
 def main(emit=print):
     rng = np.random.RandomState(0)
     ok_all = True
-    for n, width in [(4096, 4), (65536, 7), (65536, 12), (65536, 16)]:
-        vals = rng.randint(0, 2 ** width, size=n).astype(np.uint64)
+    for n, width in [(4096, 4), (65536, 7), (65536, 12), (65536, 16),
+                     (65536, 32), (16384, 64)]:
+        hi = min(2 ** width, 2 ** 63)   # randint bound caps at int64
+        vals = rng.randint(0, hi, size=n).astype(np.uint64)
         ref = _pack_bits_loop(vals, width)
         new = wire._pack_bits(vals, width)
         same = ref == new

@@ -35,6 +35,14 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q -m "not slow"
 stage "decode kernel parity"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q tests/test_decode_kernels.py
 
+# fused encode kernel parity: the device pack path (Pallas kernels +
+# XLA fallback) must produce frames byte-identical to the host codec for
+# every payload kind (<= 1 ulp for quant leaves) — the client ships
+# whatever this path packs, so a regression here corrupts the wire at
+# the source
+stage "encode kernel parity"
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q tests/test_encode_kernels.py
+
 # seeded chaos smoke: streaming + fedtrain under an injected FaultPlan
 # (corrupt/truncate/drop/duplicate/reorder) must complete with tokens and
 # losses identical to the clean run — CRC catches every corruption, sessions

@@ -88,6 +88,22 @@ def _scatter_rows(vals, idx, d: int, backend):
                               axis=-1, inplace=False)
 
 
+def mask_expand_rows(vals, words, d: int):
+    """Dense (..., d) expansion of a mask payload — the XLA reference for
+    `kernels.decode`'s mask branch.
+
+    `vals` holds the k selected values in ascending-index order; `words` the
+    packed support bitmask. Each set bit takes the next value in the scan
+    (position = cumsum of the mask); rows with extra set bits beyond k (a
+    hostile frame) zero the overflow rather than mis-indexing.
+    """
+    mask = selection.unpack_mask_words(jnp.asarray(words), d)
+    k = vals.shape[-1]
+    pos = jnp.cumsum(mask.astype(jnp.int32), axis=-1) - 1
+    take = jnp.take_along_axis(vals, jnp.clip(pos, 0, k - 1), axis=-1)
+    return jnp.where(mask & (pos < k), take, jnp.zeros_like(take))
+
+
 def payload_to_dense(p: Payload, shape=None, dtype=None, *, backend=None,
                      project=None):
     """Dense view (..., d) of any payload — the label-owner-side Decode.
@@ -120,6 +136,8 @@ def payload_to_dense(p: Payload, shape=None, dtype=None, *, backend=None,
         out = jnp.pad(p.values.astype(dtype), pad)
     elif m.kind == "sparse":
         out = _scatter_rows(p.values.astype(dtype), p.indices, m.d, backend)
+    elif m.kind == "mask":
+        out = mask_expand_rows(p.values.astype(dtype), p.indices, m.d)
     elif m.kind == "quant":
         out = _dequant(p).astype(dtype)
     elif m.kind == "sparse_quant":
@@ -226,13 +244,17 @@ class TopK(Compressor):
         return selection.topk_mask(x, self.k, backend=self.backend)
 
     def _support(self, x, key, training):
-        """uint16 indices of the selected support (stop-gradient)."""
+        """uint16 indices of the selected support (stop-gradient),
+        ascending-index order — the canonical wire order shared with the
+        fused encode kernels (`kernels.encode`), so host and device encodes
+        serialize byte-identically."""
         d = x.shape[-1]
         assert d <= MAX_INDEX, "uint16 wire indices need d <= 65536"
         k = min(self.k, d)
         mask = self._mask(x, key, training)
         score = jnp.where(mask, jnp.abs(x.astype(jnp.float32)), -1.0)
         _, idx = jax.lax.top_k(score, k)
+        idx = jnp.sort(idx, axis=-1)
         return jax.lax.stop_gradient(idx), mask
 
     def encode(self, x, *, key=None, training=False):
@@ -271,6 +293,38 @@ class RandTopK(TopK):
             raise ValueError("RandTopK.forward(training=True) needs a PRNG key")
         return selection.randtopk_mask(x, self.k, self.alpha, key,
                                        backend=self.backend)
+
+
+@dataclasses.dataclass(frozen=True)
+class RandTopKMask(RandTopK):
+    """RandTopK with a mask-encoded wire format (Zhou et al. 2024,
+    ROADMAP item 5): the u16 index stream is replaced by one packed d-bit
+    support bitmask per instance, and the k values are shipped in
+    ascending-index order (the mask's scan order). Wins over the
+    u16-index sparse layout whenever k/d > 16/(32*16) = 1/16 per
+    wire.table2_row("randtopk_mask"); selection semantics (Eq. 7) are
+    identical to RandTopK, so accuracy is untouched."""
+
+    name: str = "randtopk_mask"
+
+    wire_kind = "mask"
+
+    def encode(self, x, *, key=None, training=False):
+        d = x.shape[-1]
+        idx, mask = self._support(x, key, training)   # ascending order
+        vals = jnp.take_along_axis(x, idx, axis=-1).astype(jnp.float32)
+        words = selection.pack_mask_words(jax.lax.stop_gradient(mask))
+        return Payload(meta=PayloadMeta("mask", d=d, k=idx.shape[-1]),
+                       values=vals, indices=words)
+
+    def _aux(self, p, x, training):
+        return {"mask": selection.unpack_mask_words(p.indices, p.meta.d)}
+
+    def fwd_bits(self, d):
+        return self.k * FLOAT_BITS + 8 * ((d + 7) // 8)
+
+    def bwd_bits(self, d):
+        return self.k * FLOAT_BITS
 
 
 def _quant_encode(x, bits: int):
@@ -422,6 +476,7 @@ def make_compressor(spec: Optional[str], **kw) -> Compressor:
         "size_reduction": SizeReduction,
         "topk": TopK,
         "randtopk": RandTopK,
+        "randtopk_mask": RandTopKMask,
         "quant": Quantization,
         "l1": L1Reg,
         "randtopk_quant": RandTopKQuant,

@@ -18,6 +18,9 @@ Payload kinds:
   quant        codes  u8  (..., d) + header f32 (..,2)  uniform quantization
   sparse_quant codes  u8  (..., k) + indices u16
                + header f32 (..., 2)                  randtopk + quant
+  mask         values f32 (..., k) + indices u32      randtopk, mask-encoded
+               (indices = packed d-bit support bitmask, ceil(d/32) words;
+               values in ascending-index order — Zhou et al. 2024)
 """
 from __future__ import annotations
 
@@ -26,7 +29,10 @@ from typing import Any, Optional, Tuple
 
 import jax
 
-KINDS = ("dense", "slice", "sparse", "quant", "sparse_quant")
+# "mask" is appended last: the wire subheader serializes the kind as its
+# index into this tuple, so insertion anywhere else would re-number the
+# historical kinds and break every golden frame.
+KINDS = ("dense", "slice", "sparse", "quant", "sparse_quant", "mask")
 
 #: wire-leaf field names, in transfer order
 WIRE_FIELDS = ("values", "indices", "header")
@@ -50,9 +56,10 @@ class PayloadMeta:
 class Payload:
     """Pytree of wire-dtype device arrays + static meta.
 
-    `values` carries f32 values (dense/slice/sparse) or u8 codes (quant
-    kinds); `indices` the u16 support (sparse kinds); `header` the f32
-    per-instance `(lo, step)` quantization range (quant kinds).
+    `values` carries f32 values (dense/slice/sparse/mask) or u8 codes (quant
+    kinds); `indices` the u16 support (sparse kinds) or the packed u32
+    bitmask words (mask kind); `header` the f32 per-instance `(lo, step)`
+    quantization range (quant kinds).
     """
 
     meta: PayloadMeta

@@ -75,6 +75,33 @@ def mask_from_indices(idx: jax.Array, d: int) -> jax.Array:
     return jnp.any(onehot, axis=-2)
 
 
+def pack_mask_words(mask: jax.Array) -> jax.Array:
+    """Pack a boolean support mask (..., d) into little-endian uint32 words
+    (..., ceil(d/32)) — the device-resident layout of the `mask` payload
+    kind (bit j of the row mask is bit j%32 of word j//32)."""
+    d = mask.shape[-1]
+    nw = (d + 31) // 32
+    m = mask.astype(jnp.uint32)
+    pad = nw * 32 - d
+    if pad:
+        m = jnp.pad(m, [(0, 0)] * (m.ndim - 1) + [(0, pad)])
+    m = m.reshape(m.shape[:-1] + (nw, 32))
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    # set bits are disjoint across the lane axis, so a sum is a bitwise OR
+    return jnp.sum(m << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_mask_words(words: jax.Array, d: int) -> jax.Array:
+    """Inverse of `pack_mask_words`: uint32 words (..., ceil(d/32)) to a
+    boolean mask (..., d). Bits at positions >= d are ignored."""
+    nw = words.shape[-1]
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (jnp.asarray(words).astype(jnp.uint32)[..., None] >> shifts) \
+        & jnp.uint32(1)
+    flat = bits.reshape(words.shape[:-1] + (nw * 32,))
+    return flat[..., :d].astype(bool)
+
+
 def _select_m_from_pool(scores: jax.Array, pool: jax.Array, m: jax.Array, k: int):
     """Select exactly `m` elements uniformly w/o replacement from `pool`.
 

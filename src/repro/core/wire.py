@@ -11,8 +11,9 @@ Serialization is payload-typed: `encode_payload` / `decode_payload` map the
 the pod boundary) to/from a bitstream, so the measured socket bytes, the
 device transfer bytes, and the Table-2 analytic formulas are all derived from
 one object and cross-checked in tests. Bit packing is vectorized numpy
-(bit-shift matrix + `np.packbits`), little-endian within the stream —
-byte-identical to the historical per-bit layout.
+(two-aligned-uint64-word scheme in both directions, widths up to 64),
+little-endian within the stream — byte-identical to the historical
+per-bit layout.
 
 On top of the bare payload bitstream sits a length-prefixed *frame* layer
 (`encode_payload_frame` / `decode_frame` / `FrameReader`): the unit a
@@ -38,6 +39,7 @@ in `payload_nbytes`, so the Table-2 payload analytics are untouched.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 import struct
 import zlib
@@ -86,18 +88,69 @@ def index_bits(d: int) -> int:
     return max(1, math.ceil(math.log2(d)))
 
 
+def mask_words(d: int) -> int:
+    """u32 words per packed d-bit support bitmask (the device row layout the
+    `mask` payload kind keeps in its `indices` leaf)."""
+    return (d + 31) // 32
+
+
+def mask_row_nbytes(d: int) -> int:
+    """Socket bytes per packed d-bit support bitmask (byte-aligned per row)."""
+    return (d + 7) // 8
+
+
+def mask_words_to_bytes(words: np.ndarray, d: int) -> bytes:
+    """Serialize (..., W) u32 mask words to the per-row byte-aligned wire
+    layout: bit j of a row's mask is bit j%8 of its byte j//8 — i.e. the
+    little-endian byte view of the little-endian words, truncated to
+    `mask_row_nbytes(d)` per row."""
+    w = np.ascontiguousarray(np.asarray(words).astype("<u4", copy=False))
+    w = w.reshape(-1, mask_words(d))
+    rows = w.view(np.uint8).reshape(w.shape[0], -1)
+    return rows[:, :mask_row_nbytes(d)].tobytes()
+
+
+def mask_bytes_to_words(buf, n: int, d: int) -> np.ndarray:
+    """Inverse of `mask_words_to_bytes`: (n, mask_words(d)) uint32 words."""
+    mb, nw = mask_row_nbytes(d), mask_words(d)
+    raw = np.frombuffer(buf, dtype=np.uint8, count=n * mb)
+    padded = np.zeros((n, 4 * nw), dtype=np.uint8)
+    padded[:, :mb] = raw.reshape(n, mb)
+    return padded.view("<u4").astype(np.uint32)
+
+
 def _pack_bits(vals: np.ndarray, width: int) -> bytes:
     """Pack unsigned ints (any shape) into a bitstream, `width` bits each.
 
     Value i occupies absolute bit positions [i*width, (i+1)*width), least
     significant bit first; bit j of the stream is bit j%8 of byte j//8.
+
+    Mirror of `_unpack_bits`'s two-aligned-word scheme: values are grouped
+    64 per row so a group spans exactly `width` uint64 words, and a static
+    loop over the 64 lanes ORs each lane into its (at most two) aligned
+    words — no `(count, width)` bit matrix is ever materialized (the
+    historical `>> shifts` + `np.packbits` path cost ~9 x `count x width`
+    bytes of intermediates). Byte-identical outputs are pinned by
+    `benchmarks/wire_packing` against the per-bit reference loop.
     """
     vals = np.ascontiguousarray(vals).astype(np.uint64).ravel()
     if vals.size == 0 or width == 0:
         return b""
-    shifts = np.arange(width, dtype=np.uint64)
-    bits = ((vals[:, None] >> shifts) & np.uint64(1)).astype(np.uint8)
-    return np.packbits(bits.ravel(), bitorder="little").tobytes()
+    assert width <= 64
+    n = vals.size
+    groups = (n + 63) // 64
+    lanes = np.zeros((groups, 64), dtype=np.uint64)
+    lanes.ravel()[:n] = vals & np.uint64((1 << width) - 1)
+    words = np.zeros((groups, width), dtype=np.uint64)
+    for i in range(min(64, n)):
+        start = i * width
+        j, off = start // 64, start % 64
+        words[:, j] |= lanes[:, i] << np.uint64(off)
+        if off and off + width > 64:
+            # spill into the next word; j+1 < width holds whenever a lane
+            # spills (start + width <= 64 * width)
+            words[:, j + 1] |= lanes[:, i] >> np.uint64(64 - off)
+    return words.astype("<u8", copy=False).tobytes()[:(n * width + 7) // 8]
 
 
 def _unpack_bits(buf: bytes, width: int, count: int) -> np.ndarray:
@@ -113,7 +166,7 @@ def _unpack_bits(buf: bytes, width: int, count: int) -> np.ndarray:
     """
     if count == 0 or width == 0:
         return np.zeros(count, dtype=np.uint64)
-    assert width <= 32, "wire value widths are <= 16 index / 8 code bits"
+    assert width <= 64
     arr = np.frombuffer(buf, dtype=np.uint8)
     nbytes = (count * width + 7) // 8
     if arr.size < nbytes:
@@ -177,11 +230,16 @@ def encode_payload(p: Payload) -> bytes:
       sparse      : values f32, then indices packed @ r = ceil(log2 d) bits
       quant       : header f32 (lo, step)/instance, then codes packed @ bits
       sparse_quant: header f32, then indices packed @ r, then codes @ bits
+      mask        : values f32 (ascending-index order), then one packed
+                    d-bit support mask per instance, byte-aligned per row
     """
     m = p.meta
     kind = m.kind
     if kind in ("dense", "slice"):
         return np.asarray(p.values).astype("<f4").tobytes()
+    if kind == "mask":
+        return (np.asarray(p.values).astype("<f4").tobytes()
+                + mask_words_to_bytes(np.asarray(p.indices), m.d))
     if kind == "sparse":
         return (np.asarray(p.values).astype("<f4").tobytes()
                 + _pack_bits(np.asarray(p.indices), index_bits(m.d)))
@@ -215,6 +273,12 @@ def decode_payload(buf: bytes, meta: PayloadMeta, batch_shape) -> Payload:
         return Payload(meta=meta,
                        values=vals.reshape(*batch_shape, k),
                        indices=idx.astype(np.uint16).reshape(*batch_shape, k))
+    if kind == "mask":
+        vals = np.frombuffer(buf, dtype="<f4", count=n * k)
+        words = mask_bytes_to_words(buf[4 * n * k:], n, d)
+        return Payload(meta=meta,
+                       values=vals.reshape(*batch_shape, k),
+                       indices=words.reshape(*batch_shape, mask_words(d)))
     if kind == "quant":
         head = np.frombuffer(buf, dtype="<f4", count=2 * n)
         codes = _unpack_bits(buf[8 * n:], meta.bits, n * d)
@@ -250,6 +314,8 @@ def payload_bits_per_instance(meta: PayloadMeta) -> float:
         return k * FLOAT_BITS
     if kind == "sparse":
         return k * (FLOAT_BITS + r)
+    if kind == "mask":
+        return k * FLOAT_BITS + 8 * mask_row_nbytes(d)
     if kind == "quant":
         return d * meta.bits + 2 * FLOAT_BITS
     if kind == "sparse_quant":
@@ -268,6 +334,12 @@ def table2_row(method: str, d: int, *, k: int = 0, bits: int = 0) -> dict:
         fwd = bwd = k / d
     elif method in ("topk", "randtopk"):
         fwd = k / d * (1 + r / n)
+        bwd = k / d
+    elif method == "randtopk_mask":
+        # mask-encoded sparsification: k floats + one packed d-bit support
+        # mask (byte-aligned) replaces the per-index stream; beats
+        # u16-index sparse whenever k/d > 1/16
+        fwd = (k * n + 8 * mask_row_nbytes(d)) / (d * n)
         bwd = k / d
     elif method == "quant":
         fwd = bits / n  # paper writes 2^b/N with b meaning bits-per-value grid
@@ -389,18 +461,41 @@ def payload_frame_header_nbytes(p: Payload) -> int:
             + _CRC.size)
 
 
-def _payload_subheader(p: Payload) -> bytes:
-    m = p.meta
-    bshape = p.batch_shape
+# memoized: a streaming session re-frames the SAME (meta, batch_shape)
+# every step, and the subheader/byte-count recompute was a measurable
+# slice of the per-frame host pack time (benchmarks/serve_throughput.py's
+# encode gate). Bounded: one entry per distinct payload meta in the process.
+@functools.lru_cache(maxsize=4096)
+def _meta_subheader(m: PayloadMeta, bshape) -> bytes:
     sub = _PAYLOAD_HEAD.pack(KINDS.index(m.kind), m.d, m.k, m.bits,
                              len(bshape))
     return sub + (struct.pack(f"<{len(bshape)}I", *bshape) if bshape else b"")
+
+
+def _payload_subheader(p: Payload) -> bytes:
+    return _meta_subheader(p.meta, p.batch_shape)
 
 
 def encode_payload_frame(session: int, seq: int, p: Payload) -> bytes:
     """Frame a payload: self-describing subheader + `encode_payload` bytes."""
     return _frame(FRAME_PAYLOAD, session, seq,
                   _payload_subheader(p) + encode_payload(p))
+
+
+def encode_payload_frame_from_bytes(session: int, seq: int, m: PayloadMeta,
+                                    batch_shape, body: bytes) -> bytes:
+    """Frame an already-serialized payload bitstream (the device encode
+    path: `kernels/encode` packs the wire sections on device, so the host's
+    only work is this subheader + CRC wrap of the pulled buffer). `body`
+    must be exactly the bytes `encode_payload` would produce — the length
+    is checked here, byte equality is pinned in tests."""
+    expect = payload_expected_nbytes(m, batch_shape)
+    if len(body) != expect:
+        raise BadCount(f"{m.kind} payload of batch shape "
+                       f"{tuple(batch_shape)} needs {expect} B, device "
+                       f"buffer holds {len(body)} B")
+    return _frame(FRAME_PAYLOAD, session, seq,
+                  _meta_subheader(m, tuple(batch_shape)) + body)
 
 
 def grad_frame_header_nbytes(p: Payload) -> int:
@@ -448,6 +543,11 @@ def encode_error_frame(session: int, seq: int, code: int,
 def payload_expected_nbytes(meta: PayloadMeta, batch_shape) -> int:
     """Exact `encode_payload` byte count for (meta, batch_shape) — each
     bit-packed section rounds up to whole bytes independently."""
+    return _expected_nbytes(meta, tuple(batch_shape))
+
+
+@functools.lru_cache(maxsize=4096)
+def _expected_nbytes(meta: PayloadMeta, batch_shape) -> int:
     n = int(np.prod(batch_shape, dtype=np.int64)) if batch_shape else 1
     kind, d, k, r = meta.kind, meta.d, meta.k, index_bits(meta.d)
     if kind == "dense":
@@ -456,6 +556,8 @@ def payload_expected_nbytes(meta: PayloadMeta, batch_shape) -> int:
         return 4 * n * k
     if kind == "sparse":
         return 4 * n * k + (n * k * r + 7) // 8
+    if kind == "mask":
+        return 4 * n * k + n * mask_row_nbytes(d)
     if kind == "quant":
         return 8 * n + (n * d * meta.bits + 7) // 8
     if kind == "sparse_quant":
@@ -469,7 +571,7 @@ def _validated_meta(kind_idx: int, d: int, k: int, bits: int) -> PayloadMeta:
     kind = KINDS[kind_idx]
     if not 1 <= d <= 65536:                 # uint16 indices bound d
         raise BadCount(f"payload d={d} out of range")
-    if kind in ("slice", "sparse", "sparse_quant") and not 1 <= k <= d:
+    if kind in ("slice", "sparse", "sparse_quant", "mask") and not 1 <= k <= d:
         raise BadCount(f"{kind} payload k={k} out of range for d={d}")
     if kind in ("quant", "sparse_quant") and not 1 <= bits <= 8:
         raise BadCount(f"{kind} payload bits={bits} out of range")

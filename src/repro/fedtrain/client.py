@@ -8,7 +8,11 @@ steps — blocks for the server's `grad` frame, decodes the compressed cut
 gradient back onto the forward support (`protocol.client_grad_decode`), and
 pulls it through the bottom VJP. The wire is byte-literal in both
 directions: every counter in `self.stats` is the length of a real framed
-byte string.
+byte string. The grad route is keyed on the *forward* payload's kind and
+indices leaf, so every wire kind — including `mask`, whose indices leaf
+is the packed support bitmask the decode re-expands with — works without
+per-kind client code (tests/test_fedtrain.py pins randtopk_mask ==
+randtopk step for step).
 
 Policies plug in at two points:
 

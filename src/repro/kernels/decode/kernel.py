@@ -47,6 +47,7 @@ KIND_LEAVES = {
     "sparse": ("values", "indices"),
     "quant": ("values", "header"),
     "sparse_quant": ("values", "indices", "header"),
+    "mask": ("values", "indices"),   # indices = packed u32 bitmask words
 }
 
 
@@ -70,6 +71,54 @@ def _scatter_block(vals, idx, d: int):
 
     return jax.lax.fori_loop(0, vals.shape[-1], body,
                              jnp.zeros(vals.shape[:-1] + (d,), jnp.float32))
+
+
+def _mask_bits_block(words, d: int):
+    """Per-lane support bits of a (br, W) packed-u32 tile -> bool (br, d).
+
+    Lane l's bit lives at bit l%32 of word l//32; the W-step loop broadcasts
+    each word across the lanes it owns (compare-and-select, no gather)."""
+    lanes = jax.lax.broadcasted_iota(jnp.int32, words.shape[:-1] + (d,),
+                                     words.ndim - 1)
+    wi = lanes // 32
+    sh = (lanes % 32).astype(jnp.uint32)
+
+    def body(j, acc):
+        wj = jax.lax.dynamic_slice_in_dim(words, j, 1, axis=-1)
+        bit = (wj >> sh) & jnp.uint32(1)
+        return acc | ((wi == j) & (bit != 0))
+
+    return jax.lax.fori_loop(0, words.shape[-1], body,
+                             jnp.zeros(lanes.shape, bool))
+
+
+def _cumsum_lanes(x):
+    """Inclusive prefix sum along lanes via log-step shifted adds
+    (Hillis-Steele) — static pad+slice only, no scan/reduce_window
+    primitives and no dots (the decode roofline budgets zero dot-flops)."""
+    d = x.shape[-1]
+    step = 1
+    while step < d:
+        shifted = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(step, 0)])[..., :d]
+        x = x + shifted
+        step *= 2
+    return x
+
+
+def _mask_expand_block(vals, words, d: int):
+    """Mask-driven expand of a (br, k) value tile onto (br, d) lanes: the
+    j-th value lands on the lane of the (j+1)-th set bit (ascending-index
+    value order). Set bits beyond k (a hostile mask) expand to zero, exactly
+    like `core.compressors.mask_expand_rows`."""
+    mask = _mask_bits_block(words, d)
+    pos = _cumsum_lanes(mask.astype(jnp.int32)) - 1
+
+    def body(j, acc):
+        vj = jax.lax.dynamic_slice_in_dim(vals, j, 1, axis=-1)
+        return acc + jnp.where(mask & (pos == j), vj, 0.0)
+
+    return jax.lax.fori_loop(0, vals.shape[-1], body,
+                             jnp.zeros(mask.shape, jnp.float32))
 
 
 def _decode_block(kind: str, leaf_refs, d: int):
@@ -96,6 +145,10 @@ def _decode_block(kind: str, leaf_refs, d: int):
         c_ref, i_ref, h_ref = leaf_refs
         return _scatter_block(_dequant_block(c_ref[...], h_ref[...]),
                               i_ref[...].astype(jnp.int32), d)
+    if kind == "mask":
+        v_ref, w_ref = leaf_refs
+        return _mask_expand_block(v_ref[...].astype(jnp.float32),
+                                  w_ref[...], d)
     raise ValueError(kind)
 
 

@@ -1,0 +1,4 @@
+"""Fused payload-encode Pallas kernels (the encode-side mirror of
+`kernels.decode`): selection-mask -> value gather -> quantize -> bit-pack
+into device u32 words, so the client's only host crossing is the final
+packed wire buffer."""

@@ -1,0 +1,265 @@
+"""Fused payload-encode Pallas kernels: gather + quantize + bit-pack.
+
+The encode-side mirror of `kernels.decode`. Two kernel families:
+
+  * `encode_rows_kernel` — (rows, d) activation [+ selection mask] -> the
+    payload's wire leaves in one lane-parallel VMEM pass per row tile:
+    support gather (the transpose of the decode scatter: positions from a
+    log-step lane prefix-sum over the mask), in-kernel uniform quantization
+    (identical arithmetic to `core.compressors`, same 1-ulp FMA convention
+    as the decode side), and for the `mask` kind the packed u32 bitmask
+    words. One dispatch per payload kind.
+  * `pack_bits_kernel` — the device bit-packer: a flat stream of unsigned
+    ints at `width` bits each becomes little-endian u32 words, bit j of the
+    stream landing at bit j%32 of word j//32 — the exact bitstream
+    `core.wire._pack_bits` produces on host (its two-aligned-word scheme at
+    32-bit granularity: 32 values span exactly `width` words, and a static
+    loop over the 32 lanes ORs each value into its at-most-two words).
+
+Neither family touches `jnp.dot`, so the compiled encode programs cost
+zero dot-flops — `roofline.analysis.serving_encode_costs` budgets them as
+pure byte movement, audited in `benchmarks/serve_throughput.py`.
+
+Values cross the gather verbatim (bit-exact vs the XLA encode for
+dense/slice/sparse/mask); quant kinds re-run the host's min/max + floor
+grid, which either compiler may contract/reassociate — the <= 1-ulp
+convention pinned by tests/test_encode_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.decode.kernel import _cumsum_lanes
+
+#: wire leaves each payload kind's encode kernel emits, in
+#: `payload.WIRE_FIELDS` order (dtypes are the kernel-friendly wide forms;
+#: `ops.encode_rows` narrows them to the wire dtypes)
+KIND_OUTPUTS = {
+    "dense": ("values",),
+    "slice": ("values",),
+    "sparse": ("values", "indices"),
+    "quant": ("values", "header"),
+    "sparse_quant": ("values", "indices", "header"),
+    "mask": ("values", "indices"),
+}
+
+
+def _gather_block(x, mask, k: int):
+    """Compact the masked lanes of a (br, d) tile into (br, k) values +
+    (br, k) int32 indices, ascending-index order — the transpose of
+    `kernels.decode._scatter_block` (compare-and-select, no gather op)."""
+    d = x.shape[-1]
+    lanes = jax.lax.broadcasted_iota(jnp.int32, x.shape[:-1] + (d,),
+                                     x.ndim - 1)
+    pos = _cumsum_lanes(mask.astype(jnp.int32)) - 1
+    hit = mask & (pos < k)
+
+    def body(j, acc):
+        vals, idx = acc
+        sel = hit & (pos == j)
+        vj = jnp.sum(jnp.where(sel, x, 0.0), axis=-1, keepdims=True)
+        ij = jnp.sum(jnp.where(sel, lanes, 0), axis=-1, keepdims=True)
+        vals = jax.lax.dynamic_update_slice_in_dim(vals, vj, j, axis=-1)
+        idx = jax.lax.dynamic_update_slice_in_dim(idx, ij, j, axis=-1)
+        return vals, idx
+
+    init = (jnp.zeros(x.shape[:-1] + (k,), jnp.float32),
+            jnp.zeros(x.shape[:-1] + (k,), jnp.int32))
+    return jax.lax.fori_loop(0, k, body, init)
+
+
+def _mask_words_block(mask, d: int):
+    """Pack a (br, d) boolean tile into (br, ceil(d/32)) u32 words — the
+    `mask` payload's device row layout (bit l%32 of word l//32)."""
+    nw = (d + 31) // 32
+    m = mask.astype(jnp.uint32)
+    pad = nw * 32 - d
+    if pad:
+        m = jnp.concatenate(
+            [m, jnp.zeros(m.shape[:-1] + (pad,), jnp.uint32)], axis=-1)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    cols = []
+    for j in range(nw):
+        seg = m[..., 32 * j: 32 * (j + 1)]
+        cols.append(jnp.sum(seg << shifts, axis=-1, keepdims=True,
+                            dtype=jnp.uint32))
+    return jnp.concatenate(cols, axis=-1)
+
+
+def _quant_block(vals, bits: int, *, selected: bool):
+    """In-kernel uniform quantization of a (br, w) tile.
+
+    `selected=False` is `core.compressors._quant_encode` (full-row range,
+    degenerate step -> 1.0 via `step <= 0`); `selected=True` is the
+    RandTopKQuant variant (range over the selected values, `hi > lo`
+    guard). Same formulas, so host and kernel agree to the FMA ulp.
+    """
+    lo = jnp.min(vals, axis=-1, keepdims=True)
+    hi = jnp.max(vals, axis=-1, keepdims=True)
+    n_bins = 2 ** bits
+    if selected:
+        step = jnp.where(hi > lo, (hi - lo) / n_bins, 1.0)
+    else:
+        step = (hi - lo) / n_bins
+        step = jnp.where(step <= 0, 1.0, step)
+    code = jnp.clip(jnp.floor((vals - lo) / step), 0, n_bins - 1)
+    return code.astype(jnp.int32), jnp.concatenate([lo, step], axis=-1)
+
+
+def _encode_block(kind: str, x, mask, d: int, k: int, bits: int):
+    """(br, d) activation tile -> wire-leaf tile(s), dispatched on kind."""
+    if kind == "dense":
+        return (x.astype(jnp.float32),)
+    if kind == "slice":
+        return (x[..., :k].astype(jnp.float32),)
+    if kind == "sparse":
+        vals, idx = _gather_block(x.astype(jnp.float32), mask, k)
+        return vals, idx
+    if kind == "quant":
+        codes, hdr = _quant_block(x.astype(jnp.float32), bits,
+                                  selected=False)
+        return codes, hdr
+    if kind == "sparse_quant":
+        vals, idx = _gather_block(x.astype(jnp.float32), mask, k)
+        codes, hdr = _quant_block(vals, bits, selected=True)
+        return codes, idx, hdr
+    if kind == "mask":
+        vals, _ = _gather_block(x.astype(jnp.float32), mask, k)
+        return vals, _mask_words_block(mask, d)
+    raise ValueError(kind)
+
+
+def _rows_blocks(leading_shape, block_rows: int):
+    rows = 1
+    for s in leading_shape:
+        rows *= s
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    return rows, br, pad
+
+
+def _out_descr(kind: str, d: int, k: int):
+    """(width, dtype) per output leaf of `_encode_block`, in order."""
+    nw = (d + 31) // 32
+    return {
+        "dense": ((d, jnp.float32),),
+        "slice": ((k, jnp.float32),),
+        "sparse": ((k, jnp.float32), (k, jnp.int32)),
+        "quant": ((d, jnp.int32), (2, jnp.float32)),
+        "sparse_quant": ((k, jnp.int32), (k, jnp.int32), (2, jnp.float32)),
+        "mask": ((k, jnp.float32), (nw, jnp.uint32)),
+    }[kind]
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "k", "bits",
+                                             "block_rows", "interpret"))
+def encode_rows_kernel(x, mask=None, *, kind: str, k: int = 0,
+                       bits: int = 0, block_rows: int = 128,
+                       interpret: bool = True):
+    """Fused one-pass encode: activation rows -> wire-leaf arrays.
+
+    x    : (..., d) activation
+    mask : (..., d) selection mask (int32/bool; required for the sparse /
+           sparse_quant / mask kinds, ignored otherwise) — produced by
+           `core.selection`'s kernels, so mask -> gather -> quantize ->
+           (bit)pack never leaves the device
+    Returns the tuple of leaf arrays named by `KIND_OUTPUTS[kind]`, common
+    leading shape `x.shape[:-1]`.
+    """
+    d = x.shape[-1]
+    assert d <= 16384, "dense row must fit a VMEM row tile"
+    lead = x.shape[:-1]
+    rows, br, pad = _rows_blocks(lead, block_rows)
+    flat = [x.reshape((rows, d))]
+    needs_mask = kind in ("sparse", "sparse_quant", "mask")
+    if needs_mask:
+        assert mask is not None, f"{kind} encode needs a selection mask"
+        flat.append(mask.reshape((rows, d)).astype(jnp.int32))
+    if pad:
+        flat = [jnp.pad(a, ((0, pad), (0, 0))) for a in flat]
+    grid = (flat[0].shape[0] // br,)
+    descr = _out_descr(kind, d, k)
+
+    def kernel(*refs):
+        if needs_mask:
+            x_ref, m_ref, *o_refs = refs
+            m = m_ref[...] != 0
+        else:
+            x_ref, *o_refs = refs
+            m = None
+        outs = _encode_block(kind, x_ref[...], m, d, k, bits)
+        for o_ref, o in zip(o_refs, outs):
+            o_ref[...] = o.astype(o_ref.dtype)
+
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, a.shape[-1]), lambda i: (i, 0))
+                  for a in flat],
+        out_specs=[pl.BlockSpec((br, w), lambda i: (i, 0))
+                   for w, _ in descr],
+        out_shape=[jax.ShapeDtypeStruct((flat[0].shape[0], w), dt)
+                   for w, dt in descr],
+        interpret=interpret,
+    )(*flat)
+    outs = [o[:rows].reshape(lead + (o.shape[-1],)) if pad
+            else o.reshape(lead + (o.shape[-1],)) for o in outs]
+    return tuple(outs)
+
+
+def _pack_block(lanes, width: int):
+    """(bg, 32) value tile -> (bg, width) u32 words: a static loop over the
+    32 lanes ORs each value's low/high parts into its aligned word(s) —
+    `core.wire._pack_bits`'s scheme at 32-bit granularity."""
+    v = lanes.astype(jnp.uint32)
+    if width < 32:
+        v = v & jnp.uint32((1 << width) - 1)
+    cols = [jnp.zeros(v.shape[:-1] + (1,), jnp.uint32)
+            for _ in range(width)]
+    for i in range(32):
+        start = i * width
+        j, off = start // 32, start % 32
+        vi = v[..., i:i + 1]
+        cols[j] = cols[j] | (vi << jnp.uint32(off))
+        if off and off + width > 32:
+            # spill into the next word; j+1 < width whenever a lane spills
+            cols[j + 1] = cols[j + 1] | (vi >> jnp.uint32(32 - off))
+    return jnp.concatenate(cols, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("width", "block_groups",
+                                             "interpret"))
+def pack_bits_kernel(vals, width: int, *, block_groups: int = 256,
+                     interpret: bool = True):
+    """Device bit-pack: flat unsigned ints -> little-endian u32 words.
+
+    The returned (ceil(n/32) * width,) u32 buffer's first
+    `ceil(n * width / 8)` bytes are exactly `core.wire._pack_bits(vals,
+    width)` (padding values are zero and land strictly after the real
+    bits, so host truncation is a suffix cut).
+    """
+    assert 1 <= width <= 32
+    vals = vals.reshape(-1)
+    n = vals.shape[0]
+    groups = (n + 31) // 32
+    bg = min(block_groups, groups)
+    gpad = (-groups) % bg
+    v = jnp.pad(vals.astype(jnp.uint32), (0, (groups + gpad) * 32 - n))
+    v = v.reshape(groups + gpad, 32)
+
+    def kernel(v_ref, o_ref):
+        o_ref[...] = _pack_block(v_ref[...], width)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=((groups + gpad) // bg,),
+        in_specs=[pl.BlockSpec((bg, 32), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bg, width), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((groups + gpad, width), jnp.uint32),
+        interpret=interpret,
+    )(v)
+    return out[:groups].reshape(groups * width)

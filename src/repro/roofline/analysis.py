@@ -149,8 +149,9 @@ def model_flops(cfg, *, tokens: int, training: bool) -> float:
 
 #: measured decode bytes / predicted floor — XLA materializes scatter
 #: staging (zeros + one-hot accumulate) on top of the decoded update slice;
-#: dense decode sits at ~1.0x, sparse kinds at ~2.7x.
-DECODE_BYTES_BAND = (1.0, 4.0)
+#: dense decode sits at ~1.0x, sparse kinds at ~2.7x, and the mask kind at
+#: ~4.2x (bitmask unpack + the prefix-sum position map are both staged).
+DECODE_BYTES_BAND = (1.0, 5.0)
 #: measured fused-step bytes / predicted floor — per-layer activation
 #: intermediates (attention scores, FFN hidden states, residual copies,
 #: all materialized per arena row) land on top of the state-update floor
@@ -159,6 +160,14 @@ FUSED_BYTES_BAND = (1.0, 16.0)
 #: fused-step dot flops are fully predictable: matmul params + attention
 #: score/mix dots; everything else in the program is elementwise.
 FUSED_FLOPS_RTOL = 0.05
+#: measured encode bytes / predicted floor — the fused device encode
+#: (`split.protocol.client_encode_device`: selection -> gather -> quantize
+#: -> bit-pack) materializes the selection machinery on top of the
+#: activation-in / packed-words-out floor: dense sits at 1.0x exactly,
+#: full-row quant at ~2.5x (code staging before the pack), and the top-k
+#: kinds at ~6.6-6.8x (sort/threshold selection staging) on the XLA:CPU
+#: smoke programs.
+ENCODE_BYTES_BAND = (1.0, 10.0)
 
 
 def top_matmul_params(cfg, cut: int) -> int:
@@ -180,6 +189,20 @@ def serving_decode_costs(rows: int, d: int, *, dtype_bytes: int = 4):
     written + read (2 * rows * d); measured lands within
     `DECODE_BYTES_BAND` of it depending on how much scatter staging the
     payload kind makes XLA materialize."""
+    return 0.0, 2.0 * rows * d * dtype_bytes
+
+
+def serving_encode_costs(rows: int, d: int, *, dtype_bytes: int = 4):
+    """Predicted (flops, bytes floor) of the client's fused device-encode
+    program (`protocol.client_encode_device`: selection mask -> gather ->
+    quantize -> bit-pack into wire words).
+
+    No dots -> 0 flops exactly (selection, gather, quantization, and the
+    bit-pack are all elementwise/compare/shift work — the kernels'
+    zero-dot-flops budget, see `kernels.encode`). The byte floor is the
+    activation read + an output write of the same order (2 * rows * d);
+    measured lands within `ENCODE_BYTES_BAND` of it depending on how much
+    selection/pack staging the payload kind makes XLA materialize."""
     return 0.0, 2.0 * rows * d * dtype_bytes
 
 

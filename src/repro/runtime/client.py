@@ -8,6 +8,15 @@ split-inference loop, one round trip per token. Prompt tokens are prefilled
 through the same path (the server's top model must see them to build its
 KV), with the replies discarded until the prompt is exhausted.
 
+With `device_encode=True` the bottom step is the
+`steps.make_bottom_step_device` variant: the wire bitstream is packed on
+device (`kernels.encode`), and the host work per step shrinks to pulling
+the packed u32 sections, truncating them to exact byte length, and
+wrapping subheader + CRC (`wire.encode_payload_frame_from_bytes`). Either
+way the per-step host pack time is accumulated in `encode_s` (the bench's
+client `encode` µs/token stage) and covered by the `client.encode` trace
+span, which now encloses frame assembly as well as the model step.
+
 Recovery is the stop-and-wait ARQ loop of `runtime.arq.ArqClientMixin`:
 requests carry the step as their sequence number, token replies echo it,
 and the client retransmits on timeout, drops stale duplicates, and
@@ -17,12 +26,14 @@ byte-identical to the pre-ARQ loop.
 """
 from __future__ import annotations
 
+import time
 from typing import Callable, Optional
 
 import jax
 import numpy as np
 
 from repro.core import wire
+from repro.kernels.encode import ops as enc_ops
 from repro.obs.trace import (NULL_TRACER, SPAN_CLIENT_ENCODE, SPAN_WIRE_SEND,
                              session_tid)
 from repro.runtime.arq import ArqClientMixin
@@ -42,7 +53,8 @@ class StreamingClient(ArqClientMixin):
                  max_retries: int = 16,
                  reconnect: Optional[Callable] = None,
                  clock: Clock = SYSTEM_CLOCK,
-                 tracer=NULL_TRACER, registry=None):
+                 tracer=NULL_TRACER, registry=None,
+                 device_encode: bool = False):
         self.id = session_id
         self.clock = clock
         self.tracer = tracer
@@ -58,6 +70,9 @@ class StreamingClient(ArqClientMixin):
         self.retry_timeout = retry_timeout      # None -> never retransmit
         self.max_retries = max_retries
         self.reconnect = reconnect              # () -> fresh endpoint
+        self.device_encode = device_encode      # bottom step packs the wire
+        self.encode_s = 0.0   # host pack CPU seconds (thread_time), summed
+        self.encode_steps = 0       # frames packed (encode_s's denominator)
         self.stats = SessionStats()
         self.generated: list = []
         self.latencies: list = []       # per-step send->reply seconds
@@ -101,10 +116,28 @@ class StreamingClient(ArqClientMixin):
             self.tracer.name_track(tid, f"session {self.id}")
         for step in range(n_steps):
             with self.tracer.span(SPAN_CLIENT_ENCODE, tid=tid, step=step):
-                payload, self.cache = self.bottom_step(self.params,
-                                                       self.cache, token)
-                payload = jax.tree.map(np.asarray, payload)  # device -> host
-            frame_bytes = wire.encode_payload_frame(self.id, step, payload)
+                out, self.cache = self.bottom_step(self.params,
+                                                   self.cache, token)
+                # sync the device step first so `encode_s` isolates the
+                # HOST pack work — the stage the device wire path shrinks.
+                # Thread CPU time, not wall: under N client threads the
+                # GIL adds ~100us of scheduler wait to any wall-clocked
+                # region, swamping the pack cost being measured.
+                out = jax.block_until_ready(out)
+                t_pack = time.thread_time()
+                if self.device_encode:
+                    payload, sections = out
+                    body = enc_ops.sections_to_bytes(
+                        payload.meta, payload.batch_shape, sections)
+                    frame_bytes = wire.encode_payload_frame_from_bytes(
+                        self.id, step, payload.meta, payload.batch_shape,
+                        body)
+                else:
+                    payload = jax.tree.map(np.asarray, out)  # device -> host
+                    frame_bytes = wire.encode_payload_frame(self.id, step,
+                                                            payload)
+                self.encode_s += time.thread_time() - t_pack
+                self.encode_steps += 1
             t_send = self.clock.monotonic()
             self.endpoint.send(frame_bytes)
             if trace:

@@ -92,7 +92,8 @@ def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
                   retry_timeout: Optional[float] = None,
                   max_retries: int = 16, tracer=None, mesh=None,
                   capacity: Optional[int] = None,
-                  release_steps: bool = False) -> dict:
+                  release_steps: bool = False,
+                  device_encode: bool = True) -> dict:
     """Serve `n_clients` concurrent sessions of `prompt_len + gen` tokens.
 
     Returns a dict with the generated tokens `(n_clients, gen)`, per-session
@@ -119,6 +120,15 @@ def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
     `release_steps` drops the cross-run step cache on exit
     (`clear_serving_steps`) — for sweeps that never revisit a
     configuration.
+
+    `device_encode` (default on) gives every client the
+    `steps.make_bottom_step_device` bottom step: the wire bitstream is
+    packed on device and the host's per-step encode work is pull +
+    truncate + CRC. Frames are byte-identical either way; the result's
+    `client_encode_s` / `client_encode_steps` aggregate the per-client
+    host pack time (the bench's `encode` µs/token stage), so
+    `device_encode=False` is the host-pack baseline the serve bench gates
+    against.
     """
     rt = Runtime(mesh=None, training=False)
     # the label owner may serve from a quantized KV arena (int8 codes +
@@ -136,7 +146,9 @@ def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
     comps = _client_compressors(cfg, n_clients, compressor_mix)
 
     # one jitted bottom step per distinct compressor (frozen -> hashable)
-    bottom_steps = {c: jax.jit(steps.make_bottom_step(cfg, rt, cut, c))
+    make_bottom = (steps.make_bottom_step_device if device_encode
+                   else steps.make_bottom_step)
+    bottom_steps = {c: jax.jit(make_bottom(cfg, rt, cut, c))
                     for c in dict.fromkeys(comps)}
     make_cache = lambda: transformer.init_cache(params, cfg, rt, 1, max_len)
     make_top_cache = lambda: transformer.init_cache(params, cfg, rt_top, 1,
@@ -176,7 +188,7 @@ def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
             _connect(cid), prompts[cid], gen,
             retry_timeout=retry_timeout, max_retries=max_retries,
             reconnect=lambda cid=cid: _connect(cid),
-            tracer=tracer, registry=registry))
+            tracer=tracer, registry=registry, device_encode=device_encode))
 
     # warm every hot-loop jit BEFORE spawning threads (one compile, not a
     # storm — and the serving clock never pays compile time): bottom steps,
@@ -184,7 +196,8 @@ def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
     tok0 = np.zeros((1, 1), np.int32)
     dummy = {c: step(params, make_cache(), tok0)
              for c, step in bottom_steps.items()}
-    server.warm([jax.tree.map(np.asarray, p) for p, _ in dummy.values()])
+    examples = [out[0] if device_encode else out for out, _ in dummy.values()]
+    server.warm([jax.tree.map(np.asarray, p) for p in examples])
 
     t0 = time.perf_counter()
     serve_thread = threading.Thread(target=server.serve_loop, daemon=True)
@@ -230,6 +243,12 @@ def run_streaming(cfg: ArchConfig, *, n_clients: int = 8, prompt_len: int = 4,
         "host_bytes": dict(server.host_bytes),
         "flushes": len(server.batch_sizes),
         "client_latencies": [list(c.latencies) for c in clients],
+        # host-side frame-pack CPU seconds summed over clients (+ the
+        # frame count) — the client `encode` stage of
+        # gate_stage_us_per_token (thread CPU time: see runtime.client)
+        "client_encode_s": sum(c.encode_s for c in clients),
+        "client_encode_steps": sum(c.encode_steps for c in clients),
+        "device_encode": device_encode,
         "wall_s": wall,
         "tokens_per_s": tokens.size / max(wall, 1e-9),
         "n_clients": n_clients,

@@ -53,6 +53,7 @@ import jax
 import numpy as np
 
 from repro.core import compressors, wire
+from repro.kernels.encode import ops as _enc_ops
 from repro.models import transformer
 from repro.models.config import ArchConfig, Runtime
 from repro.obs.export import write_trace
@@ -161,6 +162,9 @@ class LoadGenConfig:
     retry_timeout: Optional[float] = 0.5
     max_retries: int = 64
     max_sessions: int = 0               # hard cap on arrivals (0 = none)
+    device_encode: bool = True          # device-packed wire frames (the
+    #   `steps.make_bottom_step_device` path; frames are byte-identical to
+    #   the host codec, so seeded reports do not depend on this flag)
     max_exact_latency_samples: int = 0  # >0: `LatencyStats` drops its
     #   exact-sample list once this many samples arrive and reports the
     #   streaming P² estimates only (runtime/metrics.py) — the opt-in for
@@ -425,7 +429,8 @@ class _Harness:
         examples = []
         for spec in dict.fromkeys(specs):
             comp, fn = self._bottom(spec)
-            payload, _ = fn(self.params, self._make_cache(), tok0)
+            out, _ = fn(self.params, self._make_cache(), tok0)
+            payload = out[0] if self.lg.device_encode else out
             examples.append(jax.tree.map(np.asarray, payload))
         self.server.warm(examples)
 
@@ -435,8 +440,9 @@ class _Harness:
         hit = self._bottom_cache.get(spec)
         if hit is None:
             comp = compressors.make_compressor(spec)
-            fn = jax.jit(steps.make_bottom_step(self.cfg, self.rt, self.cut,
-                                                comp))
+            make = (steps.make_bottom_step_device if self.lg.device_encode
+                    else steps.make_bottom_step)
+            fn = jax.jit(make(self.cfg, self.rt, self.cut, comp))
             hit = self._bottom_cache[spec] = (comp, fn)
         return hit
 
@@ -528,10 +534,17 @@ class _Harness:
                               step=ls.step):
             # instantaneous in virtual time (compute is pre-warmed and
             # virtual-free): the span records ordering, not duration
-            payload, ls.cache = bottom(self.params, ls.cache,
-                                       ls.next_token())
-            payload = jax.tree.map(np.asarray, payload)
-        frame_bytes = wire.encode_payload_frame(ls.id, ls.step, payload)
+            out, ls.cache = bottom(self.params, ls.cache, ls.next_token())
+            if self.lg.device_encode:
+                payload, sections = out
+                body = _enc_ops.sections_to_bytes(
+                    payload.meta, payload.batch_shape, sections)
+                frame_bytes = wire.encode_payload_frame_from_bytes(
+                    ls.id, ls.step, payload.meta, payload.batch_shape, body)
+            else:
+                payload = jax.tree.map(np.asarray, out)
+                frame_bytes = wire.encode_payload_frame(ls.id, ls.step,
+                                                        payload)
         hb = wire.payload_frame_header_nbytes(payload)
         ls.stats.count_up(header_nbytes=hb,
                           payload_nbytes=len(frame_bytes) - hb)

@@ -57,6 +57,33 @@ def make_bottom_step(cfg: ArchConfig, rt: Runtime, cut: int,
     return bottom_step
 
 
+def make_bottom_step_device(cfg: ArchConfig, rt: Runtime, cut: int,
+                            comp: compressors.Compressor) -> Callable:
+    """Device-encode variant of `make_bottom_step`: the wire bitstream is
+    packed on device inside the same jit program
+    (`split.protocol.client_encode_device`), so the client's only host
+    crossing per step is the final packed buffer(s).
+
+    (params, cache, token (1,1) i32) -> ((Payload, sections), new cache).
+    The Payload keeps device leaves (shape/meta for the frame subheader);
+    `sections` are the packed u32 wire buffers the host truncates with
+    `kernels.encode.ops.sections_to_bytes` and frames with
+    `wire.encode_payload_frame_from_bytes` — byte-identical to the host
+    codec on `make_bottom_step`'s payload.
+    """
+    from repro.split import protocol
+
+    def bottom_step(params, cache, token):
+        x = transformer.embed(params, cfg, rt, token)
+        x, partial = transformer.decode_layers(params, cfg, rt, x, cache,
+                                               0, cut)
+        payload, sections = protocol.client_encode_device(comp, x,
+                                                          training=False)
+        return (payload, sections), _merge_range(cache, partial, prefix=True)
+
+    return bottom_step
+
+
 def make_top_step(cfg: ArchConfig, rt: Runtime, cut: int) -> Callable:
     """Vmapped server step: (params, x (S,1,1,d), caches stacked over S) ->
     (tokens (S,1) i32, new caches). One compile serves every batch; padded

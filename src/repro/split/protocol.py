@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core import compressors
+from repro.core import compressors, selection
 from repro.core.payload import Payload, PayloadMeta
 from repro.models.config import ArchConfig, Runtime, SplitConfig
 
@@ -36,9 +36,9 @@ def make_cut_compressor(sc: SplitConfig) -> compressors.Compressor:
     """Config -> codec object (factory; the protocol itself is generic)."""
     kw = {}
     if sc.compressor in ("topk", "randtopk", "randtopk_quant",
-                         "size_reduction"):
+                         "randtopk_mask", "size_reduction"):
         kw["k"] = sc.k
-    if sc.compressor in ("randtopk", "randtopk_quant"):
+    if sc.compressor in ("randtopk", "randtopk_quant", "randtopk_mask"):
         kw["alpha"] = sc.alpha
     if sc.compressor in ("quant", "randtopk_quant"):
         kw["bits"] = sc.quant_bits
@@ -102,6 +102,13 @@ def _grad_to_wire(kind: str, g, idx_far, k: int):
     """Label-owner side: the gradient leaves that cross back (Table 2 bwd)."""
     if kind in ("sparse", "sparse_quant"):
         return jnp.take_along_axis(g, idx_far.astype(jnp.int32), axis=-1)
+    if kind == "mask":
+        # idx_far = the packed support bitmask words; gather the k supported
+        # gradient values in ascending-index order (the mask payload's value
+        # order, so the feature owner can expand with the same mask)
+        mask = selection.unpack_mask_words(idx_far, g.shape[-1])
+        idx = jnp.argsort(~mask, axis=-1, stable=True)[..., :k]
+        return jnp.take_along_axis(g, idx, axis=-1)
     if kind == "slice":
         return g[..., :k]
     return g  # dense / quant: full-precision dense gradient
@@ -110,12 +117,15 @@ def _grad_to_wire(kind: str, g, idx_far, k: int):
 def _grad_from_wire(kind: str, gw, idx_local, d: int):
     """Feature-owner side: route the wire gradient onto the activation.
 
-    Sparse/slice kinds scatter onto the forward support (the paper's
+    Sparse/slice/mask kinds scatter onto the forward support (the paper's
     same-mask backward); dense/quant kinds are the identity (STE)."""
     if kind in ("sparse", "sparse_quant"):
         out = jnp.zeros(gw.shape[:-1] + (d,), gw.dtype)
         return jnp.put_along_axis(out, idx_local.astype(jnp.int32), gw,
                                   axis=-1, inplace=False)
+    if kind == "mask":
+        # idx_local = packed support words; mask-driven expand, ascending
+        return compressors.mask_expand_rows(gw, idx_local, d)
     if kind == "slice":
         pad = [(0, 0)] * (gw.ndim - 1) + [(0, d - gw.shape[-1])]
         return jnp.pad(gw, pad)
@@ -272,6 +282,46 @@ def client_encode(comp: compressors.Compressor, x, *, key=None,
     return jax.tree.map(np.asarray, p)
 
 
+def client_encode_device(comp: compressors.Compressor, x, *, key=None,
+                         training: bool = False):
+    """Device variant of `client_encode`: the wire bitstream is assembled
+    on device (`kernels.encode.ops.pack_payload`), so the only host
+    crossing is the final packed buffer(s) — no f32 dense pull, no numpy
+    bit matrix.
+
+    Returns `(payload, sections)`: `payload` keeps DEVICE leaves (the
+    support leaf stays available for the training-direction grad decode
+    without a dense pull), `sections` are the packed u32 buffers. Frame
+    them with::
+
+        body = enc_ops.sections_to_bytes(p.meta, p.batch_shape, sections)
+        wire.encode_payload_frame_from_bytes(sid, seq, p.meta,
+                                             p.batch_shape, body)
+
+    When the backend resolves to Pallas (on-TPU default), the sparse /
+    quant / mask kinds run the fused `kernels.encode` kernel (selection
+    mask -> gather -> quantize -> pack in one pass); elsewhere the XLA
+    `comp.encode` feeds the XLA bit-packer. Byte equality of the two
+    paths with the host codec is pinned in tests/test_encode_kernels.py.
+    """
+    from repro.kernels.encode import ops as enc_ops
+
+    kind = comp.wire_kind
+    backend = selection._resolve_backend(comp.backend)
+    if backend == "pallas" and kind in ("sparse", "sparse_quant", "mask",
+                                        "quant", "slice"):
+        d = x.shape[-1]
+        k = min(getattr(comp, "k", 0) or 0, d)
+        mask = (comp._mask(x, key, training)
+                if kind in ("sparse", "sparse_quant", "mask") else None)
+        p = enc_ops.encode_rows(x, kind, k=k,
+                                bits=getattr(comp, "bits", 0), mask=mask,
+                                interpret=selection._pallas_interpret())
+    else:
+        p = comp.encode(x, key=key, training=training)
+    return p, enc_ops.pack_payload(p, backend=comp.backend)
+
+
 def server_decode(p: Payload, *, dtype=None):
     """Label-owner half: dense (..., d) view of a received payload.
 
@@ -369,7 +419,7 @@ def server_grad_encode(p: Payload, g) -> Payload:
     k = min(p.meta.k or d, d)
     idx = None if p.indices is None else jnp.asarray(p.indices)
     gw = _grad_to_wire(kind, jnp.asarray(g), idx, k)
-    sparse_bwd = kind in ("sparse", "sparse_quant", "slice")
+    sparse_bwd = kind in ("sparse", "sparse_quant", "slice", "mask")
     meta = (PayloadMeta("slice", d=d, k=k) if sparse_bwd
             else PayloadMeta("dense", d=d))
     return Payload(meta=meta, values=np.asarray(gw, np.float32))

@@ -33,7 +33,7 @@ class SplitSpec:
     hidden: int = 256
     cut_dim: int = 128          # d — bottom model output (paper: 128 for CIFAR)
     n_classes: int = 100
-    method: str = "none"        # none|topk|randtopk|size_reduction|quant|l1
+    method: str = "none"  # none|topk|randtopk|randtopk_mask|size_reduction|quant|l1
     k: int = 3
     alpha: float = 0.1
     quant_bits: int = 4
@@ -86,7 +86,9 @@ def _forward_view(o_b, spec: SplitSpec, key, training: bool):
                              bits=spec.quant_bits)
         y, aux = comp.forward(o_b, key=key, training=training)
         return y, aux["mask"]
-    elif spec.method == "randtopk":
+    elif spec.method in ("randtopk", "randtopk_mask"):
+        # randtopk_mask differs only in wire encoding (packed support
+        # bitmask instead of u16 indices); the selection math is shared
         mask = (selection.randtopk_mask(o_b, spec.k, spec.alpha, key)
                 if training else selection.topk_mask(o_b, spec.k))
     elif spec.method == "size_reduction":
@@ -142,6 +144,8 @@ def spec_compressor(spec: SplitSpec) -> C.Compressor:
         return C.TopK(k=spec.k)
     if m == "randtopk":
         return C.RandTopK(k=spec.k, alpha=spec.alpha)
+    if m == "randtopk_mask":
+        return C.RandTopKMask(k=spec.k, alpha=spec.alpha)
     if m == "size_reduction":
         return C.SizeReduction(k=spec.k)
     if m == "quant":

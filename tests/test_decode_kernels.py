@@ -19,6 +19,7 @@ KIND_COMPRESSORS = [
     ("sparse", C.make_compressor("randtopk", k=6)),
     ("quant", C.make_compressor("quant", bits=4)),
     ("sparse_quant", C.make_compressor("randtopk_quant", k=6, bits=8)),
+    ("mask", C.make_compressor("randtopk_mask", k=6)),
 ]
 IDS = [k for k, _ in KIND_COMPRESSORS]
 

@@ -1,0 +1,185 @@
+"""Fused encode kernel family (`kernels.encode`): interpret-mode Pallas
+parity against the XLA `Compressor.encode` for every payload kind, the
+device bit-packer against `core.wire._pack_bits`, and byte equality of the
+device wire path (`pack_payload` -> `sections_to_bytes`) with the host
+codec — including the full-frame round trip through
+`protocol.client_encode_device` on both backends."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compressors as C
+from repro.core import wire
+from repro.kernels.encode import kernel as enc_kernel
+from repro.kernels.encode import ops as enc_ops
+from repro.split import protocol
+
+KIND_COMPRESSORS = [
+    ("dense", C.make_compressor("identity")),
+    ("slice", C.make_compressor("size_reduction", k=6)),
+    ("sparse", C.make_compressor("randtopk", k=6)),
+    ("quant", C.make_compressor("quant", bits=4)),
+    ("sparse_quant", C.make_compressor("randtopk_quant", k=6, bits=8)),
+    ("mask", C.make_compressor("randtopk_mask", k=6)),
+]
+IDS = [k for k, _ in KIND_COMPRESSORS]
+#: kinds the fused Pallas encode kernel covers (dense has no device pack
+#: work beyond the f32 bitcast, so it never dispatches to the kernel)
+KERNEL_KINDS = ("slice", "sparse", "quant", "sparse_quant", "mask")
+
+
+def _host_payload(comp, x, *, key):
+    p = comp.encode(x, key=key, training=True)
+    return jax.tree.map(np.asarray, p)
+
+
+def _kernel_payload(comp, x, *, key):
+    """The fused-kernel half of `protocol.client_encode_device`, called
+    directly so the test controls the selection key."""
+    kind = comp.wire_kind
+    d = x.shape[-1]
+    mask = (comp._mask(x, key, True)
+            if kind in ("sparse", "sparse_quant", "mask") else None)
+    return enc_ops.encode_rows(x, kind, k=min(getattr(comp, "k", 0), d),
+                               bits=getattr(comp, "bits", 0), mask=mask,
+                               interpret=True)
+
+
+def _assert_leaves_match(kind, ref, got):
+    """Non-quant leaves cross the gather verbatim — bit-exact. Quant codes
+    and range headers re-run the min/max + floor grid, which either
+    compiler may FMA-contract: <= 1 ulp at the leaf's largest magnitude
+    (the decode-side convention of tests/test_decode_kernels.py)."""
+    for field in ("values", "indices", "header"):
+        r, g = getattr(ref, field), getattr(got, field)
+        assert (r is None) == (g is None), field
+        if r is None:
+            continue
+        r, g = np.asarray(r), np.asarray(g)
+        assert r.shape == g.shape and r.dtype == g.dtype, field
+        if kind in ("quant", "sparse_quant") and field in ("values",
+                                                           "header"):
+            rf, gf = r.astype(np.float64), g.astype(np.float64)
+            atol = float(np.spacing(np.float32(np.abs(rf).max() or 1.0)))
+            np.testing.assert_allclose(gf, rf, rtol=0, atol=atol)
+        else:
+            np.testing.assert_array_equal(r, g, err_msg=field)
+
+
+# ---------------------------------------------------------------------------
+# Fused encode kernel == XLA compressor encode, every kernel kind
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,comp", KIND_COMPRESSORS, ids=IDS)
+def test_encode_rows_matches_xla(kind, comp):
+    if kind not in KERNEL_KINDS:
+        pytest.skip("dense never dispatches to the encode kernel")
+    x = jnp.asarray(np.random.RandomState(0).randn(5, 1, 32).astype(
+        np.float32))
+    key = jax.random.key(7)
+    ref = _host_payload(comp, x, key=key)
+    got = _kernel_payload(comp, x, key=key)
+    assert got.meta == ref.meta
+    assert got.batch_shape == ref.batch_shape == (5, 1)
+    _assert_leaves_match(kind, ref, got)
+
+
+@pytest.mark.parametrize("kind,comp", KIND_COMPRESSORS, ids=IDS)
+def test_encode_rows_odd_shapes(kind, comp):
+    """Leading shapes exercising the row-block padding path and a d that
+    is not a multiple of 32 (a partial trailing bitmask word)."""
+    if kind not in KERNEL_KINDS:
+        pytest.skip("dense never dispatches to the encode kernel")
+    rng = np.random.RandomState(1)
+    for shape, d in [((3,), 70), ((2, 3, 1), 256), ((1, 1, 1, 1), 48)]:
+        x = jnp.asarray(rng.randn(*shape, d).astype(np.float32))
+        key = jax.random.key(d)
+        ref = _host_payload(comp, x, key=key)
+        got = _kernel_payload(comp, x, key=key)
+        _assert_leaves_match(kind, ref, got)
+
+
+# ---------------------------------------------------------------------------
+# Device bit-packer == wire._pack_bits, both backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("width", [1, 4, 5, 7, 8, 12, 16, 31, 32])
+def test_pack_bits_matches_host(width):
+    rng = np.random.RandomState(width)
+    for n in (1, 31, 32, 33, 100):
+        hi = min(1 << width, 1 << 31)
+        vals = rng.randint(0, hi, size=n).astype(np.uint32)
+        ref = wire._pack_bits(vals, width)
+        for packed in (
+                enc_kernel.pack_bits_kernel(jnp.asarray(vals), width,
+                                            interpret=True),
+                enc_ops._pack_words_xla(jnp.asarray(vals), width)):
+            buf = np.asarray(packed).tobytes()
+            assert buf[:len(ref)] == ref, (width, n)
+            # padding bits land strictly after the real ones and are zero
+            assert not any(buf[len(ref):]), (width, n)
+
+
+# ---------------------------------------------------------------------------
+# Device wire path: pack_payload -> sections_to_bytes == host codec, and
+# the framed bytes are identical through both client_encode halves
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,comp", KIND_COMPRESSORS, ids=IDS)
+def test_sections_match_host_codec(kind, comp):
+    """Same payload leaves in -> same wire bytes out, for ANY leaf source:
+    pure byte-layer equality, so it holds for every kind incl. quant."""
+    rng = np.random.RandomState(2)
+    for shape, d in [((4, 1), 32), ((3,), 70), ((2, 2), 48)]:
+        x = jnp.asarray(rng.randn(*shape, d).astype(np.float32))
+        p = comp.encode(x, key=jax.random.key(0), training=True)
+        sections = enc_ops.pack_payload(p, backend="xla")
+        nb = enc_ops.section_nbytes(p.meta, p.batch_shape)
+        assert len(sections) == len(nb)
+        body = enc_ops.sections_to_bytes(p.meta, p.batch_shape, sections)
+        host = wire.encode_payload(jax.tree.map(np.asarray, p))
+        assert body == host
+        assert len(body) == sum(nb) == wire.payload_expected_nbytes(
+            p.meta, p.batch_shape)
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("kind,comp", KIND_COMPRESSORS, ids=IDS)
+def test_client_encode_device_frame_identical(kind, comp, backend):
+    """Full-frame equality of the device wire path with the host path —
+    subheader, body, and CRC — on both backend dispatches. Quant kinds are
+    exempt from byte equality on the Pallas branch only if the FMA ulp
+    moved a code; at these shapes it does not, so frames match."""
+    comp = dataclasses.replace(comp, backend=backend)
+    x = jnp.asarray(np.random.RandomState(3).randn(4, 1, 64).astype(
+        np.float32))
+    key = jax.random.key(11)
+    p_host = protocol.client_encode(comp, x, key=key, training=True)
+    ref = wire.encode_payload_frame(9, 3, p_host)
+    p_dev, sections = protocol.client_encode_device(comp, x, key=key,
+                                                    training=True)
+    body = enc_ops.sections_to_bytes(p_dev.meta, p_dev.batch_shape,
+                                     sections)
+    got = wire.encode_payload_frame_from_bytes(9, 3, p_dev.meta,
+                                               p_dev.batch_shape, body)
+    assert got == ref
+    frame, consumed = wire.decode_frame(got)
+    assert consumed == len(got) and frame.payload.meta == p_host.meta
+
+
+def test_mask_sections_second_buffer_stays_2d():
+    """The mask kind's bitmask section must stay (n, W): its rows are
+    byte- but not word-aligned, so the host slices each row's exact
+    `mask_row_nbytes` bytes (wire.mask_words_to_bytes)."""
+    comp = C.make_compressor("randtopk_mask", k=5)
+    x = jnp.asarray(np.random.RandomState(4).randn(3, 1, 40).astype(
+        np.float32))
+    p = comp.encode(x, key=jax.random.key(0), training=True)
+    sections = enc_ops.pack_payload(p)
+    assert len(sections) == 2
+    assert sections[1].shape == (3, wire.mask_words(40))
+    # d=40 -> 5-byte rows out of 8-byte word rows: truncation per row
+    assert wire.mask_row_nbytes(40) == 5

@@ -44,10 +44,29 @@ def test_fedtrain_matches_tabular_loss_trajectory():
     assert abs(r_fed["mean_test_acc"] - r_tab["test_acc"]) < 1e-6
 
 
+def test_fedtrain_mask_matches_randtopk_trajectory():
+    """randtopk_mask == randtopk step for step at equal seeds: the mask
+    wire encoding changes the frames (packed support bitmask instead of
+    u16 indices), not the selection math or the same-mask backward."""
+    ds = _dataset()
+    r_idx = run_fedtrain(_spec("randtopk", k=7), ds, n_clients=1, epochs=1,
+                         batch=64, seed=0)
+    r_msk = run_fedtrain(_spec("randtopk_mask", k=7), ds, n_clients=1,
+                         epochs=1, batch=64, seed=0)
+    np.testing.assert_allclose(
+        np.asarray([l for _, l in r_msk["losses"][0]]),
+        np.asarray([l for _, l in r_idx["losses"][0]]), rtol=1e-6)
+    # against the wire's r-bit packed indices (r = ceil(log2 d) = 5 at
+    # d=32) the bitmask wins iff k*r > d: 7*5 = 35 > 32, so the mask
+    # frames must be strictly smaller here
+    assert r_msk["payload_bytes_up"] < r_idx["payload_bytes_up"]
+
+
 @pytest.mark.parametrize("method,kw", [
     ("randtopk", dict(k=3)), ("topk", dict(k=3)),
     ("size_reduction", dict(k=3)), ("quant", dict(quant_bits=4)),
     ("randtopk_quant", dict(k=3, quant_bits=4)), ("none", {}),
+    ("randtopk_mask", dict(k=3)),
 ])
 def test_fedtrain_measured_bytes_match_analytics(method, kw):
     """Measured up+down payload bytes agree with the compressor's Table-2

@@ -100,7 +100,7 @@ def test_single_byte_flip_never_decodes_silently(seed, xor):
 
 @given(st.integers(0, 300), st.sampled_from(
     ["identity", "topk:k=4", "randtopk:k=4", "quant:bits=4",
-     "randtopk_quant:k=4,bits=8"]))
+     "randtopk_quant:k=4,bits=8", "randtopk_mask:k=4"]))
 @settings(max_examples=25, deadline=None)
 def test_truncated_tail_then_valid_frame_is_detected(seed, spec):
     """A truncated frame glued to a later valid frame desyncs the stream;

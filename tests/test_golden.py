@@ -46,6 +46,12 @@ def _payloads() -> dict:
             values=np.asarray([[0, 128, 255]], np.uint8),
             indices=np.asarray([[1, 8, 15]], np.uint16),
             header=np.asarray([[-2.0, 0.015625]], np.float32)),
+        # support {1, 33, 38} at d=40: words [bit 1, bits 1|6], and the
+        # 2-word row truncates to mask_row_nbytes(40) = 5 wire bytes
+        "mask": Payload(
+            meta=PayloadMeta("mask", d=40, k=3),
+            values=np.asarray([[1.0, -0.5, 2.25]], np.float32),
+            indices=np.asarray([[1 << 1, (1 << 1) | (1 << 6)]], np.uint32)),
     }
 
 

@@ -29,6 +29,44 @@ def test_sparse_roundtrip(d, k, seed):
     assert abs(len(buf) * 8 - expect_bits) < 8
 
 
+@given(st.integers(1, 64), st.integers(1, 300), st.integers(0, 1000))
+@settings(max_examples=40, deadline=None)
+def test_pack_unpack_bits_roundtrip_any_width(width, n, seed):
+    """Every width the wire can carry [1, 64]: pack -> unpack is the
+    identity, the byte count is exactly ceil(n*width/8), and appending a
+    value extends the stream without disturbing the existing bytes'
+    values (the stream is truly positional, no per-value alignment)."""
+    rng = np.random.RandomState(seed)
+    hi = min(2 ** width, 2 ** 63)
+    vals = rng.randint(0, hi, size=n).astype(np.uint64)
+    buf = wire._pack_bits(vals, width)
+    assert len(buf) == (n * width + 7) // 8
+    np.testing.assert_array_equal(wire._unpack_bits(buf, width, n), vals)
+    longer = wire._pack_bits(np.concatenate([vals, vals[:1]]), width)
+    np.testing.assert_array_equal(
+        wire._unpack_bits(longer, width, n + 1)[:n], vals)
+    # a shorter read off the same buffer is a strict prefix
+    np.testing.assert_array_equal(
+        wire._unpack_bits(buf, width, n // 2), vals[:n // 2])
+
+
+@given(st.integers(1, 200), st.integers(1, 5), st.integers(0, 500))
+@settings(max_examples=30, deadline=None)
+def test_mask_words_bytes_roundtrip(d, n, seed):
+    """Packed support bitmask serialization: words -> per-row byte-aligned
+    wire bytes -> words is the identity at every d (including d not a
+    multiple of 8 or 32), and the byte count is n * ceil(d/8)."""
+    rng = np.random.RandomState(seed)
+    mask = rng.rand(n, d) < 0.3
+    words = np.zeros((n, wire.mask_words(d)), np.uint32)
+    for j in range(d):
+        words[:, j // 32] |= mask[:, j].astype(np.uint32) << (j % 32)
+    buf = wire.mask_words_to_bytes(words, d)
+    assert len(buf) == n * wire.mask_row_nbytes(d)
+    np.testing.assert_array_equal(wire.mask_bytes_to_words(buf, n, d),
+                                  words)
+
+
 def test_sparse_to_dense():
     vals = np.array([[1.0, -2.0]])
     idx = np.array([[3, 0]])
@@ -67,7 +105,8 @@ def test_bytes_per_step():
 ALL_COMPRESSORS = [("identity", {}), ("size_reduction", dict(k=5)),
                    ("topk", dict(k=5)), ("randtopk", dict(k=5, alpha=0.2)),
                    ("quant", dict(bits=4)),
-                   ("randtopk_quant", dict(k=5, bits=8)), ("l1", {})]
+                   ("randtopk_quant", dict(k=5, bits=8)), ("l1", {}),
+                   ("randtopk_mask", dict(k=5, alpha=0.2))]
 
 
 @pytest.mark.parametrize("name,kw", ALL_COMPRESSORS)
@@ -121,6 +160,11 @@ def test_grad_frame_roundtrip_all_kinds(name, kw):
     if p.meta.kind in ("sparse", "sparse_quant"):
         mask = np.zeros_like(g, dtype=bool)
         np.put_along_axis(mask, p.indices.astype(np.int64), True, axis=-1)
+        np.testing.assert_array_equal(g_cut, g * mask)
+    elif p.meta.kind == "mask":
+        from repro.core import selection
+        mask = np.asarray(selection.unpack_mask_words(
+            jax.numpy.asarray(p.indices), d)).astype(bool)
         np.testing.assert_array_equal(g_cut, g * mask)
     elif p.meta.kind == "slice":
         k = p.meta.k
